@@ -1,0 +1,57 @@
+"""Benchmark 5 — communication & rounds (paper §1.4: O(log N) rounds,
+O(md log N) total communication).
+
+Checks that the number of rounds to reach within 2x of the error floor grows
+~ logarithmically with N, and derives the per-round communication volume of
+the TPU mapping from the dry-run collective bytes (worker->server d-vector
+pushes map to the gradient reduce/gather collectives).
+"""
+
+from __future__ import annotations
+
+import math
+import os
+
+import numpy as np
+
+from benchmarks.common import run_linreg, save_json
+
+
+def rounds_to_converge(errs, floor):
+    for t, e in enumerate(errs):
+        if e <= 2.0 * floor:
+            return t
+    return len(errs)
+
+
+def main() -> dict:
+    out = {"rounds_vs_N": []}
+    for N in [2_000, 8_000, 32_000, 128_000]:
+        errs, _ = run_linreg(dim=20, total_samples=N, num_workers=20,
+                             num_byzantine=2, num_batches=10,
+                             attack="sign_flip", aggregator="gmom",
+                             rounds=60)
+        floor = errs[-1]
+        r = rounds_to_converge(errs, max(floor, 1e-8))
+        out["rounds_vs_N"].append({"N": N, "rounds": r, "logN": math.log(N)})
+        print(f"communication,N={N},rounds_to_2x_floor={r}")
+
+    # per-round communication of the TPU mapping, from the dry-run records
+    roofline_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                 "roofline_singlepod.json")
+    if os.path.exists(roofline_path):
+        import json
+        with open(roofline_path) as f:
+            recs = json.load(f)
+        trains = [r for r in recs if r["step"] == "train_step"]
+        out["per_round_collective_bytes_per_chip"] = {
+            r["arch"]: r["collective_bytes_per_device"] for r in trains}
+        for r in trains:
+            print(f"communication,{r['arch']},collective_GB_per_chip_round="
+                  f"{r['collective_bytes_per_device']/1e9:.1f}")
+    save_json("communication.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Benchmark 1 — exponential convergence under Byzantine attacks
+(Theorem 1 / Corollary 1; the paper's central claim).
+
+Linear regression (paper §4): m=50 workers, q=4 Byzantine, k canonical.
+Produces log-error traces per (aggregator × attack) and fits the empirical
+contraction rate against Corollary 1's 1/2 + sqrt(3)/4 ≈ 0.933.
+"""
+
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import run_linreg, save_json
+from repro.core import theory
+from repro.core.grouping import choose_num_batches
+
+DIM = 100
+N = 50_000
+M = 50
+Q = 4
+ROUNDS = 50
+
+
+def fit_contraction(errs, floor):
+    """Per-round contraction while well above the error floor."""
+    ratios = []
+    for a, b in zip(errs[:-1], errs[1:]):
+        if b > 5 * floor and a > 0:
+            ratios.append(b / a)
+    return sum(ratios) / len(ratios) if ratios else float("nan")
+
+
+def main() -> list[dict]:
+    k = choose_num_batches(M, Q)          # canonical 2(1+eps)q, divides m
+    rows = []
+    cases = [
+        ("mean", "none", 0),
+        ("mean", "sign_flip", Q),
+        ("gmom", "none", 0),
+        ("gmom", "sign_flip", Q),
+        ("gmom", "inner_product", Q),
+        ("gmom", "mean_shift", Q),
+        ("gmom", "colluding_mimic", Q),
+        ("gmom", "random_noise", Q),
+        ("geomed", "sign_flip", Q),
+        ("coordinate_median", "sign_flip", Q),
+        ("trimmed_mean", "sign_flip", Q),
+        ("krum", "sign_flip", Q),
+    ]
+    floor_pred = theory.error_floor(DIM, N, k)
+    rate_pred = theory.LINEAR_REGRESSION.theorem1_contraction
+    for aggregator, attack, q in cases:
+        errs, _ = run_linreg(
+            dim=DIM, total_samples=N, num_workers=M, num_byzantine=q,
+            num_batches=(k if aggregator in ("gmom",) else
+                         M if aggregator == "geomed" else k),
+            attack=attack, aggregator=aggregator, rounds=ROUNDS)
+        final = errs[-1]
+        rate = fit_contraction(errs, max(final, 1e-6))
+        rows.append({
+            "aggregator": aggregator, "attack": attack, "q": q, "k": k,
+            "final_error": final,
+            "empirical_contraction": rate,
+            "theory_contraction": rate_pred,
+            "theory_floor_c2=1": floor_pred,
+            "diverged": bool(final > errs[0]),
+            "errors": errs,
+        })
+        print(f"convergence,{aggregator},{attack},q={q},"
+              f"final={final:.4f},rate={rate:.3f}")
+    save_json("convergence.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Benchmark 2 — statistical error scaling (Theorem 5 / Remark 1).
+
+Claims checked:
+  (a) error floor ~ sqrt(d k / N): slopes of log(err) vs log(d), log(N), k.
+  (b) the k trade-off: larger k tolerates more Byzantine workers but pays a
+      sqrt(k) statistical penalty.
+  (c) the sqrt(q) gap to the centralized minimax rate sqrt(d/N).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from benchmarks.common import run_linreg, save_json
+
+
+def final_error(**kw):
+    errs, ds = run_linreg(rounds=40, **kw)
+    return errs[-1]
+
+
+def slope(xs, ys):
+    lx, ly = np.log(np.asarray(xs)), np.log(np.asarray(ys))
+    return float(np.polyfit(lx, ly, 1)[0])
+
+
+def main() -> dict:
+    base = dict(num_workers=20, num_byzantine=2, attack="sign_flip",
+                aggregator="gmom", num_batches=10)
+    out = {}
+
+    # (a) error vs d at fixed N (expect slope ~ 1/2)
+    ds_ = [10, 20, 40, 80, 160]
+    errs_d = [np.mean([final_error(dim=d, total_samples=40_000, seed=s,
+                                   **base) for s in range(3)])
+              for d in ds_]
+    out["error_vs_d"] = {"d": ds_, "err": errs_d,
+                         "slope": slope(ds_, errs_d), "expect": 0.5}
+    print(f"error_scaling,d-slope,{out['error_vs_d']['slope']:.3f},expect~0.5")
+
+    # (a) error vs N at fixed d (expect slope ~ -1/2)
+    ns = [5_000, 10_000, 20_000, 40_000, 80_000]
+    errs_n = [np.mean([final_error(dim=50, total_samples=n, seed=s, **base)
+                       for s in range(3)]) for n in ns]
+    out["error_vs_N"] = {"N": ns, "err": errs_n,
+                         "slope": slope(ns, errs_n), "expect": -0.5}
+    print(f"error_scaling,N-slope,{out['error_vs_N']['slope']:.3f},"
+          f"expect~-0.5")
+
+    # (b) error vs k under NO attack (pure statistical penalty of batching)
+    ks = [1, 2, 4, 10, 20]
+    errs_k = [np.mean([final_error(dim=50, total_samples=40_000,
+                                   num_workers=20, num_byzantine=0,
+                                   attack="none", aggregator="gmom",
+                                   num_batches=k, seed=s)
+                       for s in range(3)]) for k in ks]
+    out["error_vs_k"] = {"k": ks, "err": errs_k,
+                         "slope": slope(ks[1:], errs_k[1:]), "expect": 0.5}
+    print(f"error_scaling,k-slope,{out['error_vs_k']['slope']:.3f},"
+          f"expect~0.5 (k>=2)")
+
+    # (c) gap to the centralized oracle
+    from repro.data import regression
+    import jax
+    key = jax.random.PRNGKey(0)
+    dsx = regression.generate(key, dim=50, total_samples=40_000,
+                              num_workers=20)
+    oracle = regression.centralized_erm(dsx)
+    import jax.numpy as jnp
+    oracle_err = float(jnp.linalg.norm(oracle - dsx.theta_star))
+    robust_err = final_error(dim=50, total_samples=40_000, **base)
+    out["oracle_gap"] = {
+        "oracle_err": oracle_err, "robust_err": robust_err,
+        "ratio": robust_err / oracle_err,
+        "sqrt_k_bound": math.sqrt(base["num_batches"]),
+    }
+    print(f"error_scaling,oracle-gap,{out['oracle_gap']['ratio']:.2f},"
+          f"bound~sqrt(k)={out['oracle_gap']['sqrt_k_bound']:.2f}")
+
+    save_json("error_scaling.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Benchmark 6 — kernel microbenchmarks.
+
+CPU wall-times of the jnp oracles (the compiled path this container runs)
+plus interpret-mode agreement checks for the Pallas TPU kernels.  On real
+TPU hardware the same harness times the pallas path (use_pallas=True).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_json, time_call
+from repro.kernels.attention import flash, ref as attn_ref
+from repro.kernels.geomed import ops as geomed_ops
+from repro.core.geometric_median import geometric_median
+
+
+def main() -> dict:
+    rng = np.random.default_rng(0)
+    out = {"attention": [], "geomed": []}
+
+    for (B, T, H, KV, hd) in [(1, 512, 8, 2, 64), (1, 1024, 8, 8, 64),
+                              (2, 2048, 4, 1, 128)]:
+        q = jnp.asarray(rng.normal(size=(B, T, H, hd)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(B, T, KV, hd)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(B, T, KV, hd)).astype(np.float32))
+        fn = jax.jit(lambda a, b, c: attn_ref.flash_attention_ref(
+            a, b, c, causal=True))
+        us, ref_out = time_call(fn, q, k, v, iters=3)
+        flops = 4.0 * B * H * T * T * hd / 2      # causal half
+        row = {"B": B, "T": T, "H": H, "KV": KV, "hd": hd,
+               "ref_us": us, "ref_gflops": flops / us / 1e3}
+        # interpret-mode agreement on a slice (full interpret is slow)
+        small = min(T, 256)
+        kout = flash.flash_attention(
+            q[:, :small], k[:, :small], v[:, :small], causal=True,
+            block_q=128, block_kv=128, interpret=True)
+        rout = attn_ref.flash_attention_ref(
+            q[:, :small], k[:, :small], v[:, :small], causal=True)
+        row["kernel_max_err"] = float(jnp.max(jnp.abs(kout - rout)))
+        out["attention"].append(row)
+        print(f"kernel_bench,attention,T={T},us={us:.0f},"
+              f"err={row['kernel_max_err']:.1e}")
+
+    for (k_, d) in [(8, 10_000), (32, 100_000), (8, 1_000_000)]:
+        pts = jnp.asarray(rng.normal(size=(k_, d)).astype(np.float32))
+        fn = jax.jit(lambda p: geometric_median(p, max_iters=16))
+        us, _ = time_call(fn, pts, iters=3)
+        row = {"k": k_, "d": d, "jnp_us": us,
+               "hbm_passes_per_iter_jnp": 3, "hbm_passes_per_iter_kernel": 2}
+        if d <= 100_000:
+            kout = geomed_ops.geometric_median_kernel(pts, interpret=True,
+                                                      max_iters=16)
+            jout = geometric_median(pts, max_iters=16)
+            row["kernel_max_err"] = float(jnp.max(jnp.abs(kout - jout)))
+        out["geomed"].append(row)
+        print(f"kernel_bench,geomed,k={k_},d={d},us={us:.0f}")
+
+    save_json("kernel_bench.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Benchmark 7 — beyond-paper: Byzantine GD on real transformer LMs.
+
+The paper proves its guarantees for strongly-convex risks; this benchmark
+measures the behaviour on the (non-convex) assigned architectures: per
+(arch × aggregator × attack), the loss trajectory of a reduced-config LM
+trained with the worker-mode Byzantine step.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import save_json
+from repro import optim
+from repro.configs import get_config
+from repro.core import RobustConfig, make_robust_train_step
+from repro.data.tokens import TokenStream
+from repro.models import model as M
+
+ARCHS = ["minitron-4b", "granite-moe-1b-a400m", "rwkv6-7b", "zamba2-2.7b"]
+STEPS = 10
+M_WORKERS = 8
+
+
+def run(arch, aggregator, attack):
+    cfg = get_config(arch).reduced()
+    if cfg.family == "hybrid":
+        cfg = cfg.with_(ssm_chunk=8)
+    stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=32,
+                         global_batch=16, num_workers=M_WORKERS, seed=0)
+    rc = RobustConfig(num_workers=M_WORKERS, num_byzantine=2, attack=attack,
+                      aggregator=aggregator, num_batches=8)
+    opt = optim.adamw(1e-3)
+    loss_fn = lambda p, b: M.loss_fn(p, b, cfg)  # noqa: E731
+    step = jax.jit(make_robust_train_step(loss_fn, opt, rc))
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    opt_state = opt.init(params)
+    losses = []
+    for i in range(STEPS):
+        params, opt_state, metrics = step(
+            params, opt_state, stream.batch(i), jax.random.PRNGKey(9), i)
+        losses.append(float(metrics["loss_median"]))
+    return losses
+
+
+def main() -> list[dict]:
+    rows = []
+    for arch in ARCHS:
+        for aggregator, attack in [("mean", "none"), ("mean", "sign_flip"),
+                                   ("gmom", "sign_flip"),
+                                   ("gmom", "inner_product")]:
+            losses = run(arch, aggregator, attack)
+            rows.append({"arch": arch, "aggregator": aggregator,
+                         "attack": attack, "first": losses[0],
+                         "final": losses[-1], "losses": losses})
+            print(f"lm_attack,{arch},{aggregator},{attack},"
+                  f"{losses[0]:.3f}->{losses[-1]:.3f}")
+    save_json("lm_attack.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark 10 — beyond-paper: non-iid (federated-realistic) workers.
+
+The paper assumes iid samples across workers and notes the extension to
+heterogeneous settings only in passing (§1.2: "our results can be extended
+to the heterogeneous data sizes setting when the data sizes are of the same
+order").  Federated deployments are distribution-heterogeneous, not just
+size-heterogeneous — each device's data is scaled/shifted differently.
+Sweep a covariate/noise heterogeneity factor h and measure whether GMoM's
+robustness degrades gracefully (batch means remain unbiased estimates of
+the same population gradient, so the theory's core mechanism should
+survive mild heterogeneity with an inflated effective variance).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import save_json
+from repro import optim
+from repro.core import RobustConfig, make_robust_train_step
+from repro.data import regression
+
+DIM, N, M, Q = 50, 40_000, 20, 3
+
+
+def run(h, attack, aggregator, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ds = regression.generate(key, dim=DIM, total_samples=N, num_workers=M,
+                             heterogeneity=h)
+    rc = RobustConfig(num_workers=M, num_byzantine=Q, num_batches=10,
+                      attack=attack, aggregator=aggregator)
+    opt = optim.sgd(0.4)   # eta slightly below 1/2: hetero inflates M
+    step = jax.jit(make_robust_train_step(regression.squared_loss, opt, rc))
+    theta = jnp.zeros((DIM,))
+    opt_state = opt.init(theta)
+    batches = regression.worker_batches(ds)
+    for t in range(50):
+        theta, opt_state, _ = step(theta, opt_state, batches,
+                                   jax.random.PRNGKey(1), t)
+    return float(jnp.linalg.norm(theta - ds.theta_star))
+
+
+def main() -> list[dict]:
+    rows = []
+    for h in (0.0, 0.2, 0.5, 0.8):
+        for aggregator, attack in [("mean", "none"), ("gmom", "sign_flip"),
+                                   ("gmom", "inner_product")]:
+            err = run(h, attack, aggregator)
+            rows.append({"heterogeneity": h, "aggregator": aggregator,
+                         "attack": attack, "final_error": err,
+                         "converged": bool(err < 1.0)})
+            print(f"noniid,h={h},{aggregator},{attack},err={err:.4f}")
+    save_json("noniid.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

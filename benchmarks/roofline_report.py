@@ -1,0 +1,76 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline tables from the dry-run
+JSON records (benchmarks/roofline_singlepod.json / roofline_multipod.json).
+
+    PYTHONPATH=src python -m benchmarks.roofline_report
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def load(name):
+    path = os.path.join(HERE, name)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_row(r):
+    peak = (f"{r['peak_memory_bytes'] / 2**30:.1f}"
+            if r.get("peak_memory_bytes") else "n/a")
+    return (f"| {r['arch']} | {r['shape']} | {r['step']} "
+            f"| {r['compute_term']:.2e} | {r['memory_term']:.2e} "
+            f"| {r['collective_term']:.2e} | {r['bottleneck']} "
+            f"| {r['useful_flops_ratio']:.2f} | {peak} |")
+
+
+def dominant_fraction(r):
+    terms = {"compute": r["compute_term"], "memory": r["memory_term"],
+             "collective": r["collective_term"]}
+    total = sum(terms.values())
+    return max(terms.values()) / total if total else 0.0
+
+
+def main():
+    single = load("roofline_singlepod.json")
+    multi = load("roofline_multipod.json")
+
+    print("### §Roofline — single-pod 16x16 (256 chips), per-device terms\n")
+    print("| arch | shape | step | compute s | memory s | collective s "
+          "| bottleneck | useful-FLOPs | peak GiB/chip |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in single:
+        print(fmt_row(r))
+
+    if multi:
+        print("\n### §Dry-run — multi-pod 2x16x16 (512 chips) lowering proof\n")
+        print("| arch | shape | step | compute s | memory s | collective s "
+              "| bottleneck | useful-FLOPs | peak GiB/chip |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in multi:
+            print(fmt_row(r))
+
+    if single:
+        print("\n### hillclimb candidates (worst roofline profiles)\n")
+        worst_frac = sorted(single, key=lambda r: -r["memory_term"]
+                            - r["collective_term"])[:3]
+        coll = sorted(single, key=lambda r: -r["collective_term"])[:3]
+        print("highest memory+collective:",
+              [(r["arch"], r["shape"]) for r in worst_frac])
+        print("most collective-bound:",
+              [(r["arch"], r["shape"]) for r in coll])
+        over = [(r["arch"], r["shape"],
+                 round(r["peak_memory_bytes"] / 2**30, 1))
+                for r in single
+                if r.get("peak_memory_bytes")
+                and r["peak_memory_bytes"] > 16 * 2**30]
+        print("over 16 GiB HBM:", over)
+
+
+if __name__ == "__main__":
+    main()

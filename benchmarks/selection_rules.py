@@ -1,0 +1,52 @@
+"""Benchmark 8 — the paper's §6 open question, answered empirically.
+
+Paper §6 (Discussion): "A simple idea to defend against the relaxed
+Byzantine faults is to select a subset of received gradients at each
+iteration and then take the average ... One selection rule is random
+selection and another one is to select the gradients of the small l2 norms.
+It would be interesting to investigate the performance of these two
+selection rules and compare them with the geometric median."
+
+We implement both (core/aggregators.py) and compare against GMoM under
+(a) a large-norm attack (sign_flip ×10), (b) the small-norm omniscient
+inner-product attack, (c) no attack (statistical efficiency).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import run_linreg, save_json
+
+DIM, N, M, Q = 50, 40_000, 20, 3
+
+
+def main() -> list[dict]:
+    rows = []
+    cases = [
+        # (aggregator, attack) — expected verdicts in comments
+        ("gmom", "none"),             # reference efficiency
+        ("random_select", "none"),    # fine without attack
+        ("norm_select", "none"),
+        ("gmom", "sign_flip"),        # gmom handles both attack styles
+        ("random_select", "sign_flip"),   # fails: attacker survives sampling
+        ("norm_select", "sign_flip"),     # works: attack has huge norms
+        ("gmom", "inner_product"),
+        ("random_select", "inner_product"),
+        ("norm_select", "inner_product"),  # FAILS: attack has SMALL norms
+    ]
+    for aggregator, attack in cases:
+        errs, _ = run_linreg(
+            dim=DIM, total_samples=N, num_workers=M, num_byzantine=Q,
+            num_batches=(10 if aggregator == "gmom" else M),
+            attack=attack, aggregator=aggregator, rounds=40,
+            trim_multiplier=(3.0 if aggregator == "gmom" else None))
+        rows.append({"aggregator": aggregator, "attack": attack,
+                     "final_error": errs[-1],
+                     "converged": bool(errs[-1] < 1.0)})
+        print(f"selection_rules,{aggregator},{attack},"
+              f"err={errs[-1]:.4f},converged={errs[-1] < 1.0}")
+    save_json("selection_rules.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

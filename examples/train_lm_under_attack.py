@@ -1,0 +1,75 @@
+"""Train a (reduced) assigned-architecture LM under Byzantine attack.
+
+Runs the same comparison as the paper — classical BGD vs Byzantine GD —
+but on a non-convex transformer LM with the worker-mode robust step, for a
+few hundred steps.  This is the end-to-end training driver of deliverable
+(b); arch/attack/aggregator are CLI-selectable:
+
+    PYTHONPATH=src python examples/train_lm_under_attack.py \
+        --arch minitron-4b --steps 200
+
+For production (pod-scale) training the same step lowers on the 16x16 mesh:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-4b \
+        --shape train_4k
+"""
+
+import argparse
+
+import jax
+
+from repro import optim
+from repro.configs import ARCHITECTURES, get_config
+from repro.core import RobustConfig, make_robust_train_step
+from repro.data.tokens import TokenStream
+from repro.models import model as M
+
+
+def run(arch: str, aggregator: str, attack: str, steps: int, m: int = 8):
+    cfg = get_config(arch).reduced()
+    stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=64,
+                         global_batch=16, num_workers=m, seed=0)
+    rc = RobustConfig(num_workers=m, num_byzantine=2, attack=attack,
+                      aggregator=aggregator, num_batches=8)
+    opt = optim.adamw(1e-3)
+    step = jax.jit(make_robust_train_step(
+        lambda p, b: M.loss_fn(p, b, cfg), opt, rc))
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    opt_state = opt.init(params)
+    trace = []
+    for i in range(steps):
+        params, opt_state, metrics = step(
+            params, opt_state, stream.batch(i), jax.random.PRNGKey(5), i)
+        loss = float(metrics["loss_median"])
+        trace.append(loss)
+        if i % max(steps // 10, 1) == 0:
+            print(f"  step {i:4d}  loss {loss:.4f}")
+    return trace
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="minitron-4b",
+                   choices=list(ARCHITECTURES))
+    p.add_argument("--steps", type=int, default=200)
+    args = p.parse_args()
+
+    results = {}
+    for aggregator, attack in [("mean", "none"), ("mean", "sign_flip"),
+                               ("gmom", "sign_flip")]:
+        print(f"\n=== {args.arch}: aggregator={aggregator} "
+              f"attack={attack} ===")
+        results[(aggregator, attack)] = run(args.arch, aggregator, attack,
+                                            args.steps)
+
+    print("\nsummary (final loss):")
+    for (agg, atk), trace in results.items():
+        print(f"  {agg:5s} + {atk:10s}: {trace[0]:.3f} -> {trace[-1]:.3f}")
+    clean = results[("mean", "none")][-1]
+    robust = results[("gmom", "sign_flip")][-1]
+    print(f"\nByzantine GD within {abs(robust - clean):.3f} nats of the "
+          f"attack-free run; classical BGD diverged to "
+          f"{results[('mean', 'sign_flip')][-1]:.2f}.")
+
+
+if __name__ == "__main__":
+    main()

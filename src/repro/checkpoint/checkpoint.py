@@ -1,0 +1,101 @@
+"""Msgpack-based pytree checkpointing (no orbax dependency).
+
+Layout: ``<dir>/step_<n>/ {manifest.msgpack, arrays.npz}``.  The manifest
+records the treedef (as a nested token structure), dtypes, and shapes; arrays
+are stored in a single compressed ``.npz``.  Atomic via write-to-tmp+rename.
+
+Works for params, optimizer states (NamedTuples), and metrics dicts.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(p) for p in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save(directory: str, step: int, tree, *, keep: int | None = 3) -> str:
+    """Serialize ``tree`` under ``directory/step_<step>``; returns the path."""
+    os.makedirs(directory, exist_ok=True)
+    paths, leaves, _ = _flatten_with_paths(tree)
+    arrays = {}
+    manifest = {"step": step, "leaves": []}
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        arr = np.asarray(leaf)
+        key = f"leaf_{i}"
+        arrays[key] = arr
+        manifest["leaves"].append(
+            {"path": p, "key": key, "dtype": str(arr.dtype),
+             "shape": list(arr.shape)})
+
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+            f.write(msgpack.packb(manifest))
+        np.savez_compressed(os.path.join(tmp, "arrays.npz"), **arrays)
+        final = os.path.join(directory, f"step_{step:08d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+    if keep is not None:
+        steps = sorted(all_steps(directory))
+        for old in steps[:-keep]:
+            shutil.rmtree(os.path.join(directory, f"step_{old:08d}"),
+                          ignore_errors=True)
+    return final
+
+
+def all_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_"):
+            try:
+                out.append(int(name[len("step_"):]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def latest_step(directory: str) -> int | None:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: int, example_tree):
+    """Restore into the structure of ``example_tree`` (shape/dtype checked)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        stored = {e["path"]: data[e["key"]] for e in manifest["leaves"]}
+
+    paths, leaves, treedef = _flatten_with_paths(example_tree)
+    new_leaves = []
+    for p, example in zip(paths, leaves):
+        if p not in stored:
+            raise KeyError(f"checkpoint missing leaf {p!r}")
+        arr = stored[p]
+        ex = np.asarray(example)
+        if tuple(arr.shape) != tuple(ex.shape):
+            raise ValueError(
+                f"shape mismatch for {p!r}: ckpt {arr.shape} vs {ex.shape}")
+        new_leaves.append(jnp.asarray(arr, dtype=ex.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -1,0 +1,19 @@
+"""InternVL2-26B [arXiv:2404.16821] — InternViT (stubbed: precomputed patch
+embeddings per the assignment carve-out) + InternLM2 20B-class decoder."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    source="arXiv:2404.16821",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92553,
+    frontend="vision",
+    num_patches=256,
+    rope_theta=1e6,
+)

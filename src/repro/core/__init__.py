@@ -1,0 +1,26 @@
+"""Core library: the paper's Byzantine Gradient Descent as composable pieces.
+
+Public API:
+    geometric_median, geometric_median_pytree, trim_weights
+    aggregators.get_aggregator / available
+    byzantine.get_attack / available / sample_byzantine_mask
+    RobustConfig, make_robust_train_step, per_worker_grads, aggregate
+    grouping.make_grouping / choose_num_batches
+    theory: paper constants & closed forms
+"""
+
+from repro.core.geometric_median import (  # noqa: F401
+    geometric_median,
+    geometric_median_pytree,
+    trim_weights,
+    batch_mean_norms,
+    weiszfeld_step,
+)
+from repro.core import aggregators, byzantine, grouping, theory  # noqa: F401
+from repro.core.robust_train import (  # noqa: F401
+    RobustConfig,
+    aggregate,
+    make_robust_train_step,
+    make_shardmap_aggregate,
+    per_worker_grads,
+)

@@ -1,0 +1,257 @@
+"""Robust gradient aggregation rules.
+
+Every aggregator maps a *stacked* per-worker gradient pytree (leaves with a
+leading worker axis ``m``) to a single gradient pytree (no leading axis).
+All are pure jnp/lax so they jit and shard (the worker axis is sharded over
+the mesh ``data`` axis; param dims over ``model`` — reductions become psums).
+
+The paper's contribution is ``gmom`` (geometric median of means, Algorithm 2);
+``mean`` is the paper's Algorithm 1 baseline (classical BGD).  The rest are
+well-known robust baselines used for the comparison benchmarks:
+
+* ``geomed``            — k = m special case (paper §2.1)
+* ``trimmed_mean``      — coordinate-wise beta-trimmed mean [Yin et al. '18]
+* ``coordinate_median`` — coordinate-wise median
+* ``krum``              — Blanchard et al. '17 [BMGS17], the paper's closest
+                          related work; selects the worker whose gradient has
+                          the smallest sum of distances to its m-q-2 closest.
+* ``norm_clip_mean``    — mean of norm-clipped gradients (practical baseline)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+from repro.core.geometric_median import (
+    batch_mean_norms, geometric_median, geometric_median_pytree, trim_weights)
+from repro.core.grouping import Grouping, make_grouping
+
+AggregatorFn = Callable[..., object]   # stacked pytree -> pytree
+
+_REGISTRY: dict[str, "Aggregator"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregator:
+    name: str
+    fn: AggregatorFn
+    description: str = ""
+
+    def __call__(self, stacked_grads, **kw):
+        return self.fn(stacked_grads, **kw)
+
+
+def register(name: str, description: str = ""):
+    def deco(fn):
+        _REGISTRY[name] = Aggregator(name=name, fn=fn, description=description)
+        return fn
+    return deco
+
+
+def get_aggregator(name: str) -> Aggregator:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown aggregator {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+
+def _num_workers(stacked) -> int:
+    return jax.tree.leaves(stacked)[0].shape[0]
+
+
+def _apply_grouping(stacked, grouping: Grouping):
+    """Permute + reshape worker axis m -> (k, b) and mean over b."""
+    perm = jnp.asarray(grouping.perm)
+    k, b = grouping.num_batches, grouping.batch_size
+
+    def leaf(g):
+        g = jnp.take(g, jnp.argsort(perm), axis=0)  # order workers by slot
+        g = g.reshape((k, b) + g.shape[1:])
+        return jnp.mean(g, axis=1)
+
+    return jax.tree.map(leaf, stacked)
+
+
+def batch_means(stacked_grads, num_batches: int, *,
+                scheme: str = "contiguous"):
+    """Public helper: stacked (m, ...) pytree -> (k, ...) pytree of means."""
+    m = _num_workers(stacked_grads)
+    grouping = make_grouping(m, num_batches, scheme=scheme)
+    return _apply_grouping(stacked_grads, grouping)
+
+
+# ---------------------------------------------------------------------------
+# aggregators
+
+@register("mean", "plain average — the paper's Algorithm 1 (classical BGD)")
+def mean_aggregator(stacked_grads, **_kw):
+    return jax.tree.map(lambda g: jnp.mean(g, axis=0), stacked_grads)
+
+
+@register("gmom", "geometric median of means — the paper's Algorithm 2")
+def gmom_aggregator(stacked_grads, *, num_batches: int | None = None,
+                    num_byzantine: int = 0, epsilon: float = 0.1,
+                    grouping_scheme: str = "contiguous",
+                    trim_multiplier: float | None = 3.0,
+                    max_iters: int = 64, tol: float = 1e-8, **_kw):
+    """Paper Algorithm 2 step 4: A_k(g) = med{batch means}, with the
+    Remark-2 norm trimming applied as zero Weiszfeld weights."""
+    m = _num_workers(stacked_grads)
+    if num_batches is None:
+        from repro.core.grouping import choose_num_batches
+        num_batches = choose_num_batches(m, num_byzantine, epsilon=epsilon)
+    if num_batches == 1:    # GMoM reduces to the mean (paper §2.1)
+        return mean_aggregator(stacked_grads)
+    means = batch_means(stacked_grads, num_batches, scheme=grouping_scheme)
+    weights = None
+    if trim_multiplier is not None:
+        norms = batch_mean_norms(means)
+        weights = trim_weights(norms, multiplier=trim_multiplier)
+    return geometric_median_pytree(means, weights=weights,
+                                      max_iters=max_iters, tol=tol)
+
+
+@register("geomed", "geometric median of the raw worker gradients (k = m)")
+def geomed_aggregator(stacked_grads, *, max_iters: int = 64,
+                      tol: float = 1e-8, **_kw):
+    return geometric_median_pytree(stacked_grads, max_iters=max_iters,
+                                      tol=tol)
+
+
+@register("coordinate_median", "coordinate-wise median baseline")
+def coordinate_median_aggregator(stacked_grads, **_kw):
+    return jax.tree.map(lambda g: jnp.median(g, axis=0), stacked_grads)
+
+
+@register("trimmed_mean", "coordinate-wise beta-trimmed mean baseline")
+def trimmed_mean_aggregator(stacked_grads, *, trim_fraction: float = 0.1,
+                            num_byzantine: int | None = None, **_kw):
+    m = _num_workers(stacked_grads)
+    t = num_byzantine if num_byzantine is not None else int(trim_fraction * m)
+    t = min(t, (m - 1) // 2)
+
+    def leaf(g):
+        s = jnp.sort(g, axis=0)
+        if t > 0:
+            s = s[t:m - t]
+        return jnp.mean(s, axis=0)
+
+    return jax.tree.map(leaf, stacked_grads)
+
+
+@register("krum", "Krum selection rule [BMGS17] — related-work baseline")
+def krum_aggregator(stacked_grads, *, num_byzantine: int = 0, **_kw):
+    m = _num_workers(stacked_grads)
+    # pairwise squared distances accumulated leaf-by-leaf (never flattens).
+    d2 = jnp.zeros((m, m), jnp.float32)
+    for g in jax.tree.leaves(stacked_grads):
+        gf = g.reshape(m, -1).astype(jnp.float32)
+        sq = jnp.sum(gf * gf, axis=1)
+        d2 = d2 + (sq[:, None] + sq[None, :] - 2.0 * gf @ gf.T)
+    d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf, jnp.float32))
+    # score(i) = sum of the m - q - 2 smallest distances to others
+    closest = max(m - num_byzantine - 2, 1)
+    sorted_d2 = jnp.sort(d2, axis=1)
+    scores = jnp.sum(sorted_d2[:, :closest], axis=1)
+    winner = jnp.argmin(scores)
+    return jax.tree.map(lambda g: jnp.take(g, winner, axis=0), stacked_grads)
+
+
+@register("norm_clip_mean", "mean of gradients clipped to the median norm")
+def norm_clip_mean_aggregator(stacked_grads, *, clip_multiplier: float = 1.0,
+                              **_kw):
+    norms = batch_mean_norms(stacked_grads)            # (m,)
+    tau = clip_multiplier * jnp.median(norms)
+    scale = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-12))
+
+    def leaf(g):
+        s = scale.astype(g.dtype).reshape((-1,) + (1,) * (g.ndim - 1))
+        return jnp.mean(g * s, axis=0)
+
+    return jax.tree.map(leaf, stacked_grads)
+
+
+# ---------------------------------------------------------------------------
+# paper §6 (Discussion) future-work selection rules, implemented & answered
+# empirically in benchmarks/selection_rules.py:
+#   "A simple idea to defend against the relaxed Byzantine faults is to
+#    select a subset of received gradients ... random selection ... or to
+#    select the gradients of the small l2 norms."
+
+@register("random_select",
+          "paper §6 rule 1: average a random subset of the gradients "
+          "(defends only the RELAXED adversary that cannot see the "
+          "server's random bits — fails vs the paper's omniscient model)")
+def random_select_aggregator(stacked_grads, *, key=None,
+                             subset_fraction: float = 0.5, **_kw):
+    m = _num_workers(stacked_grads)
+    n_sel = max(int(subset_fraction * m), 1)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    scores = jax.random.uniform(key, (m,))
+    thresh = jnp.sort(scores)[n_sel - 1]
+    sel = (scores <= thresh).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(sel), 1.0)
+
+    def leaf(g):
+        s = sel.astype(g.dtype).reshape((-1,) + (1,) * (g.ndim - 1))
+        return jnp.sum(g * s, axis=0) / denom.astype(g.dtype)
+
+    return jax.tree.map(leaf, stacked_grads)
+
+
+@register("norm_select",
+          "paper §6 rule 2: average the gradients with the smallest l2 "
+          "norms (beats large-norm attacks; loses to small-norm "
+          "inner-product manipulation — see benchmarks/selection_rules)")
+def norm_select_aggregator(stacked_grads, *, num_byzantine: int = 0, **_kw):
+    m = _num_workers(stacked_grads)
+    keep = max(m - max(num_byzantine, 1), 1)
+    norms = batch_mean_norms(stacked_grads)            # (m,)
+    thresh = jnp.sort(norms)[keep - 1]
+    sel = (norms <= thresh).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(sel), 1.0)
+
+    def leaf(g):
+        s = sel.astype(g.dtype).reshape((-1,) + (1,) * (g.ndim - 1))
+        return jnp.sum(g * s, axis=0) / denom.astype(g.dtype)
+
+    return jax.tree.map(leaf, stacked_grads)
+
+
+# ---------------------------------------------------------------------------
+# per-leaf ("blockwise") GMoM — the beyond-paper perf variant (DESIGN.md §3)
+
+@register("gmom_per_leaf",
+          "GMoM applied independently per parameter tensor (beyond-paper)")
+def gmom_per_leaf_aggregator(stacked_grads, *, num_batches: int | None = None,
+                             num_byzantine: int = 0, epsilon: float = 0.1,
+                             max_iters: int = 64, tol: float = 1e-8, **_kw):
+    m = _num_workers(stacked_grads)
+    if num_batches is None:
+        from repro.core.grouping import choose_num_batches
+        num_batches = choose_num_batches(m, num_byzantine, epsilon=epsilon)
+    if num_batches == 1:
+        return mean_aggregator(stacked_grads)
+    means = batch_means(stacked_grads, num_batches)
+
+    def leaf(z):
+        k = z.shape[0]
+        flat = z.reshape(k, -1)
+        med = geometric_median(flat.astype(jnp.float32),
+                                  max_iters=max_iters, tol=tol)
+        return med.astype(z.dtype).reshape(z.shape[1:])
+
+    return jax.tree.map(leaf, means)

@@ -1,0 +1,199 @@
+"""Byzantine attack zoo.
+
+The paper's fault model (§1.2): in round t an arbitrary set B_t of up to q
+workers reports arbitrary vectors; the adversary is omniscient (sees all
+honest gradients, the server program, and the server's random bits) and
+colluding, and B_t may change every round.  It cannot corrupt local data —
+only the *reported* gradients.
+
+We realize this inside the SPMD program: an ``Attack`` is a pure function
+``(stacked_honest_grads, byz_mask, key, context) -> stacked_reported_grads``
+that may read every honest gradient (omniscience) but may only *change* rows
+where ``byz_mask`` is True (enforced by construction via jnp.where).
+
+Attack selection of B_t per round is handled by ``sample_byzantine_mask``:
+either a fixed set, or an adversarially rotating set (different workers each
+round — the paper's hardest case for schemes that try to identify culprits).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+AttackFn = Callable[..., object]
+
+_REGISTRY: dict[str, "Attack"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Attack:
+    name: str
+    fn: AttackFn
+    description: str = ""
+
+    def __call__(self, stacked_grads, byz_mask, key, **kw):
+        return self.fn(stacked_grads, byz_mask, key, **kw)
+
+
+def register(name: str, description: str = ""):
+    def deco(fn):
+        _REGISTRY[name] = Attack(name=name, fn=fn, description=description)
+        return fn
+    return deco
+
+
+def get_attack(name: str) -> Attack:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown attack {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def _mask_like(mask, g):
+    """Broadcast the (m,) bool mask against a stacked leaf (m, ...)."""
+    return mask.reshape((-1,) + (1,) * (g.ndim - 1))
+
+
+def _where_byz(mask, malicious, honest):
+    return jax.tree.map(
+        lambda bad, good: jnp.where(_mask_like(mask, good), bad, good),
+        malicious, honest)
+
+
+def sample_byzantine_mask(key, num_workers: int, num_byzantine: int, *,
+                          rotate: bool = True, round_index=0) -> jax.Array:
+    """(m,) bool mask with exactly q True entries.
+
+    ``rotate=True`` draws a fresh uniformly-random q-subset per round (fold
+    the round index into the key) — modeling B_t changing across iterations.
+    ``rotate=False`` fixes the first q workers (worst case for contiguous
+    grouping: the q faults hit q distinct batches).
+    """
+    if num_byzantine == 0:
+        return jnp.zeros((num_workers,), bool)
+    if not rotate:
+        return jnp.arange(num_workers) < num_byzantine
+    key = jax.random.fold_in(key, round_index)
+    scores = jax.random.uniform(key, (num_workers,))
+    thresh = jnp.sort(scores)[num_byzantine - 1]
+    return scores <= thresh
+
+
+# ---------------------------------------------------------------------------
+# attacks
+
+@register("none", "no attack — every worker honest")
+def none_attack(stacked_grads, byz_mask, key, **_kw):
+    del byz_mask, key
+    return stacked_grads
+
+
+@register("sign_flip", "report -c × true gradient (classic reverse attack)")
+def sign_flip_attack(stacked_grads, byz_mask, key, *, scale: float = 10.0,
+                     **_kw):
+    del key
+    malicious = jax.tree.map(lambda g: -scale * g, stacked_grads)
+    return _where_byz(byz_mask, malicious, stacked_grads)
+
+
+@register("zero", "report zero gradients (stalling attack)")
+def zero_attack(stacked_grads, byz_mask, key, **_kw):
+    del key
+    malicious = jax.tree.map(jnp.zeros_like, stacked_grads)
+    return _where_byz(byz_mask, malicious, stacked_grads)
+
+
+@register("random_noise", "report large gaussian noise")
+def random_noise_attack(stacked_grads, byz_mask, key, *,
+                        scale: float = 100.0, **_kw):
+    leaves, treedef = jax.tree.flatten(stacked_grads)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [scale * jax.random.normal(k, l.shape, l.dtype)
+             for k, l in zip(keys, leaves)]
+    return _where_byz(byz_mask, jax.tree.unflatten(treedef, noisy),
+                      stacked_grads)
+
+
+@register("mean_shift",
+          "omniscient: shift the honest mean by a huge constant direction")
+def mean_shift_attack(stacked_grads, byz_mask, key, *, scale: float = 1e3,
+                      **_kw):
+    del key
+    m = jax.tree.leaves(stacked_grads)[0].shape[0]
+    q = jnp.maximum(jnp.sum(byz_mask.astype(jnp.float32)), 1.0)
+    # each byzantine reports mean + (m/q)*scale*1 so the *average* moves by
+    # ~scale in every coordinate — enough to send plain BGD to infinity.
+    def mal(g):
+        mu = jnp.mean(g, axis=0, keepdims=True)
+        shift = (m / q) * scale
+        return jnp.broadcast_to(mu + shift, g.shape).astype(g.dtype)
+    return _where_byz(byz_mask, jax.tree.map(mal, stacked_grads),
+                      stacked_grads)
+
+
+@register("inner_product",
+          "omniscient: report -eps × honest mean (Xie et al. inner-product "
+          "manipulation — small norm, survives norm filters)")
+def inner_product_attack(stacked_grads, byz_mask, key, *,
+                         epsilon_scale: float = 1.0, **_kw):
+    del key
+    def mal(g):
+        mu = jnp.mean(g, axis=0, keepdims=True)
+        return jnp.broadcast_to(-epsilon_scale * mu, g.shape).astype(g.dtype)
+    return _where_byz(byz_mask, jax.tree.map(mal, stacked_grads),
+                      stacked_grads)
+
+
+@register("colluding_mimic",
+          "omniscient collusion: all byzantine report the *same* crafted "
+          "point far away, forming a fake cluster to drag the median")
+def colluding_mimic_attack(stacked_grads, byz_mask, key, *,
+                           scale: float = 50.0, **_kw):
+    def mal(g, k):
+        mu = jnp.mean(g, axis=0, keepdims=True)
+        direction = jax.random.normal(k, mu.shape, jnp.float32)
+        direction = direction / jnp.maximum(
+            jnp.linalg.norm(direction), 1e-12)
+        point = mu + scale * jnp.linalg.norm(mu) * direction.astype(g.dtype)
+        return jnp.broadcast_to(point, g.shape).astype(g.dtype)
+    leaves, treedef = jax.tree.flatten(stacked_grads)
+    keys = jax.random.split(key, len(leaves))
+    malicious = jax.tree.unflatten(
+        treedef, [mal(l, k) for l, k in zip(leaves, keys)])
+    return _where_byz(byz_mask, malicious, stacked_grads)
+
+
+@register("anti_aggregation",
+          "omniscient: estimate what GMoM would output on honest grads and "
+          "report its negation scaled up (targets the aggregator itself)")
+def anti_aggregation_attack(stacked_grads, byz_mask, key, *,
+                            scale: float = 10.0, num_batches: int = 4, **_kw):
+    del key
+    from repro.core import aggregators as agg
+    m = jax.tree.leaves(stacked_grads)[0].shape[0]
+    nb = max(1, min(num_batches, m))
+    while m % nb != 0:
+        nb -= 1
+    honest_est = agg.gmom_aggregator(stacked_grads, num_batches=nb,
+                                     trim_multiplier=None, max_iters=8)
+    malicious = jax.tree.map(
+        lambda e, g: jnp.broadcast_to(-scale * e[None], g.shape).astype(g.dtype),
+        honest_est, stacked_grads)
+    return _where_byz(byz_mask, malicious, stacked_grads)
+
+
+@register("label_flip",
+          "non-omniscient data-poisoning proxy: gradient computed as if "
+          "labels were permuted — here approximated by negating the gradient "
+          "without rescaling (unit-norm sign attack)")
+def label_flip_attack(stacked_grads, byz_mask, key, **_kw):
+    del key
+    malicious = jax.tree.map(lambda g: -g, stacked_grads)
+    return _where_byz(byz_mask, malicious, stacked_grads)

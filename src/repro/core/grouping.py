@@ -1,0 +1,78 @@
+"""Worker -> batch grouping for the geometric median of means.
+
+The paper (Algorithm 2, step 1) fixes the partition up-front: the l-th batch
+is workers {(l-1)b+1, ..., lb} with b = m/k.  Because the Byzantine set B_t
+may change every round but the partition is fixed, at most q batches are
+contaminated each round regardless of which workers are faulty.
+
+We also provide strided and seeded-permutation partitions (ablations): the
+guarantee is identical for any *fixed* partition, but a fresh random partition
+per round is NOT safe against the paper's omniscient adversary (it observes
+the server's random bits), so reseeding per-round is deliberately not offered.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Grouping:
+    """Static worker->batch assignment. ``perm[w]`` is the slot of worker w;
+    reshaping a permuted (m, ...) array to (k, b, ...) yields the batches."""
+    num_workers: int
+    num_batches: int
+    perm: tuple[int, ...]   # length m, a permutation of range(m)
+
+    @property
+    def batch_size(self) -> int:
+        return self.num_workers // self.num_batches
+
+    def batches(self) -> list[list[int]]:
+        b = self.batch_size
+        inv = list(self.perm)
+        return [[inv[l * b + j] for j in range(b)]
+                for l in range(self.num_batches)]
+
+
+def make_grouping(num_workers: int, num_batches: int, *,
+                  scheme: str = "contiguous", seed: int = 0) -> Grouping:
+    if num_batches < 1 or num_batches > num_workers:
+        raise ValueError(
+            f"num_batches={num_batches} must be in [1, m={num_workers}]")
+    if num_workers % num_batches != 0:
+        raise ValueError(
+            f"k={num_batches} must divide m={num_workers} (paper assumption)")
+    if scheme == "contiguous":          # paper Algorithm 2
+        perm = tuple(range(num_workers))
+    elif scheme == "strided":
+        b = num_workers // num_batches
+        # worker w goes to batch w % k; stable order within batch.
+        order = sorted(range(num_workers), key=lambda w: (w % num_batches, w))
+        perm = tuple(int(np.argsort(order)[w]) for w in range(num_workers))
+        del b
+    elif scheme == "seeded":
+        rng = np.random.default_rng(seed)
+        order = rng.permutation(num_workers)
+        perm = tuple(int(np.argsort(order)[w]) for w in range(num_workers))
+    else:
+        raise ValueError(f"unknown grouping scheme {scheme!r}")
+    return Grouping(num_workers=num_workers, num_batches=num_batches,
+                    perm=perm)
+
+
+def choose_num_batches(num_workers: int, num_byzantine: int, *,
+                       epsilon: float = 0.1) -> int:
+    """The paper's canonical k (Remark 1): k=1 when q=0, else the smallest
+    divisor of m with k >= 2(1+epsilon)q (tolerance requires 2(1+eps)q<=k)."""
+    if num_byzantine == 0:
+        return 1
+    need = 2.0 * (1.0 + epsilon) * num_byzantine
+    for k in range(1, num_workers + 1):
+        if num_workers % k == 0 and k >= need:
+            return k
+    raise ValueError(
+        f"cannot tolerate q={num_byzantine} byzantine of m={num_workers}: "
+        f"need k >= {need:.1f} <= m")

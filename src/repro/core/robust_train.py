@@ -1,0 +1,191 @@
+"""Byzantine-robust distributed training step.
+
+This is the paper's Algorithm 2 realized as a single jit/pjit-able SPMD
+function (DESIGN.md §3-4):
+
+    per-worker grads (vmap over the worker-sharded batch axis)
+      -> simulated Byzantine corruption of reported gradients
+      -> robust aggregation (GMoM by default)
+      -> optimizer update
+
+The worker axis is the mesh ``data`` axis (x ``pod`` on multi-pod meshes):
+worker j's shard of the global batch is the paper's S_j, and GSPMD keeps
+worker j's gradient on data-rank j because the stacked gradient's leading
+axis is sharded over ``data``.
+
+The same function covers the failure-free baseline (attack="none",
+aggregator="mean" == paper Algorithm 1) so baseline and robust runs share
+every other line of code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregators, byzantine
+from repro.core.geometric_median import (
+    batch_mean_norms, geometric_median_pytree, trim_weights)
+
+
+@dataclasses.dataclass(frozen=True)
+class RobustConfig:
+    """Static configuration of the robust aggregation pipeline."""
+    num_workers: int
+    num_byzantine: int = 0
+    num_batches: int | None = None      # None => paper's canonical choice
+    aggregator: str = "gmom"
+    attack: str = "none"
+    attack_kwargs: tuple = ()           # tuple of (key, value) — hashable
+    rotate_byzantine: bool = True
+    epsilon: float = 0.1                # the paper's fixed eps in 2(1+eps)q<=k
+    trim_multiplier: float | None = 3.0
+    gmom_max_iters: int = 32
+    gmom_tol: float = 1e-7
+    grouping_scheme: str = "contiguous"
+
+    def resolved_num_batches(self) -> int:
+        if self.num_batches is not None:
+            return self.num_batches
+        from repro.core.grouping import choose_num_batches
+        return choose_num_batches(self.num_workers, self.num_byzantine,
+                                  epsilon=self.epsilon)
+
+
+def per_worker_grads(loss_fn: Callable, params, worker_batches, *,
+                     loss_kwargs: dict | None = None):
+    """Stacked gradients: leaf shapes (m, *param_shape).
+
+    ``worker_batches`` is a pytree whose leaves have leading dim m (the worker
+    axis).  vmap over that axis computes each worker's gradient from its own
+    shard only — the SPMD realization of "machine j computes grad f̄^(j)".
+
+    Returns (stacked_grads, per_worker_loss).
+    """
+    loss_kwargs = loss_kwargs or {}
+
+    def one_worker(batch):
+        return jax.value_and_grad(loss_fn)(params, batch, **loss_kwargs)
+
+    losses, grads = jax.vmap(one_worker, in_axes=(0,))(worker_batches)
+    return grads, losses
+
+
+def aggregate(stacked_grads, cfg: RobustConfig, *, key, round_index):
+    """Attack simulation + robust aggregation.  Pure; jit-friendly."""
+    mask = byzantine.sample_byzantine_mask(
+        key, cfg.num_workers, cfg.num_byzantine,
+        rotate=cfg.rotate_byzantine, round_index=round_index)
+    attack = byzantine.get_attack(cfg.attack)
+    attack_kwargs = dict(cfg.attack_kwargs)
+    reported = attack(stacked_grads, mask, key, **attack_kwargs)
+
+    agg = aggregators.get_aggregator(cfg.aggregator)
+    kwargs: dict[str, Any] = {}
+    if cfg.aggregator in ("gmom", "gmom_per_leaf"):
+        kwargs.update(num_batches=cfg.resolved_num_batches(),
+                      num_byzantine=cfg.num_byzantine,
+                      epsilon=cfg.epsilon,
+                      max_iters=cfg.gmom_max_iters, tol=cfg.gmom_tol)
+        if cfg.aggregator == "gmom":
+            kwargs.update(trim_multiplier=cfg.trim_multiplier,
+                          grouping_scheme=cfg.grouping_scheme)
+    elif cfg.aggregator in ("krum", "trimmed_mean", "norm_select"):
+        kwargs.update(num_byzantine=cfg.num_byzantine)
+    elif cfg.aggregator == "random_select":
+        # NOTE: the paper's adversary sees the server's random bits — and so
+        # do our omniscient attacks (they receive the same ``key``): the
+        # attacker can adapt, which is exactly the §6 caveat under test.
+        kwargs.update(key=jax.random.fold_in(key, 13))
+    return agg(reported, **kwargs)
+
+
+def make_robust_train_step(loss_fn: Callable, optimizer, cfg: RobustConfig, *,
+                           loss_kwargs: dict | None = None,
+                           donate: bool = False):
+    """Build ``train_step(params, opt_state, worker_batches, key, round) ->
+    (params, opt_state, metrics)``.
+
+    ``optimizer`` follows the repro.optim interface: ``optimizer.update(
+    grads, opt_state, params) -> (updates, opt_state)`` and params are
+    updated by ``jax.tree.map(add)``.
+    """
+
+    def train_step(params, opt_state, worker_batches, key, round_index):
+        stacked, losses = per_worker_grads(loss_fn, params, worker_batches,
+                                           loss_kwargs=loss_kwargs)
+        agg_grad = aggregate(stacked, cfg, key=key, round_index=round_index)
+        updates, opt_state = optimizer.update(agg_grad, opt_state, params)
+        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                              params, updates)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(agg_grad)))
+        metrics = {
+            "loss_mean": jnp.mean(losses),
+            # honest loss: mean over the workers that were *not* byzantine is
+            # unknowable inside the step (mask is resampled) — report median
+            # as a robust summary instead.
+            "loss_median": jnp.median(losses),
+            "agg_grad_norm": gnorm,
+        }
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper: explicit shard_map collective schedule (see EXPERIMENTS §Perf)
+
+def make_shardmap_aggregate(cfg: RobustConfig, mesh, worker_axes=("data",)):
+    """GMoM with a hand-written collective schedule under shard_map.
+
+    Baseline GSPMD lowering of ``aggregate`` all-gathers the stacked gradient
+    over ``data`` before the batch-mean reshape.  The hand schedule instead:
+
+      1. psum the gradients *within* each batch subgroup via one
+         all-reduce over the worker axis with a batch-block mask — realized
+         as all_gather of batch-mean partial sums only (k×shard, not m×shard);
+      2. runs Weiszfeld on the k means locally (replicated over data).
+
+    Requires the worker axis size to equal cfg.num_workers and contiguous
+    grouping.  Returns ``fn(stacked_local_grads) -> agg_grad`` to be called
+    inside shard_map (worker axis unstacked: each rank passes its own grad).
+    """
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+    k = cfg.resolved_num_batches()
+    m = cfg.num_workers
+    b = m // k
+
+    def agg_local(my_grad):
+        """Runs per-rank inside shard_map; my_grad has no worker axis."""
+        axis = worker_axes[0] if len(worker_axes) == 1 else worker_axes
+        # worker index along the (possibly multi-) worker axis
+        if isinstance(axis, tuple):
+            idx = jax.lax.axis_index(axis[0]) * jax.lax.axis_size(axis[1]) \
+                + jax.lax.axis_index(axis[1])
+        else:
+            idx = jax.lax.axis_index(axis)
+        batch_id = idx // b
+
+        def leaf(g):
+            # one-hot partial contribution to each batch mean, then a single
+            # all-reduce produces all k batch means replicated on every rank.
+            onehot = (jnp.arange(k) == batch_id).astype(g.dtype) / b
+            contrib = jnp.einsum("k,...->k...", onehot, g)
+            return jax.lax.psum(contrib, axis_name=axis)
+
+        means = jax.tree.map(leaf, my_grad)
+        weights = None
+        if cfg.trim_multiplier is not None:
+            norms = batch_mean_norms(means)
+            weights = trim_weights(norms, multiplier=cfg.trim_multiplier)
+        return geometric_median_pytree(
+            means, weights=weights, max_iters=cfg.gmom_max_iters,
+            tol=cfg.gmom_tol)
+
+    return agg_local

@@ -1,0 +1,3 @@
+from repro.data import regression, tokens  # noqa: F401
+from repro.data.regression import RegressionDataset, generate, squared_loss  # noqa: F401
+from repro.data.tokens import TokenStream, frame_embeddings, patch_embeddings  # noqa: F401

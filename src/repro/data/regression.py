@@ -1,0 +1,90 @@
+"""The paper's linear-regression data model (§4).
+
+    y_i = <w_i, theta*> + zeta_i,   w_i ~ N(0, I_d),  zeta_i ~ N(0, 1)
+
+Population risk F(theta) = 0.5 ||theta - theta*||^2 + 0.5 — strongly convex
+with L = M = 1, so the paper's step size is eta = 1/2 and the Corollary-1
+contraction factor is 1/2 + sqrt(3)/4.
+
+Data is generated once, split evenly into the m workers' local shards S_j
+(|S_j| = N/m, disjoint — the paper's storage model), and kept fixed across
+rounds: full-batch gradients, exactly Algorithm 1/2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RegressionDataset:
+    features: jax.Array   # (m, N/m, d) — worker-major layout
+    targets: jax.Array    # (m, N/m)
+    theta_star: jax.Array  # (d,)
+
+    @property
+    def num_workers(self) -> int:
+        return self.features.shape[0]
+
+    @property
+    def samples_per_worker(self) -> int:
+        return self.features.shape[1]
+
+    @property
+    def dim(self) -> int:
+        return self.features.shape[2]
+
+
+def generate(key, *, dim: int, total_samples: int, num_workers: int,
+             theta_star: jax.Array | None = None,
+             noise_std: float = 1.0,
+             heterogeneity: float = 0.0) -> RegressionDataset:
+    """``heterogeneity`` > 0 departs from the paper's iid assumption
+    (federated reality): worker j's covariates are scaled by a per-worker
+    factor in [1-h, 1+h] and its label noise by an independent factor —
+    workers then estimate the same theta* from differently-distributed
+    local data.  h=0 recovers the paper's model exactly."""
+    if total_samples % num_workers != 0:
+        raise ValueError("N must be divisible by m (paper: |S_j| = N/m)")
+    per = total_samples // num_workers
+    k_theta, k_w, k_z, k_h = jax.random.split(key, 4)
+    if theta_star is None:
+        theta_star = jax.random.normal(k_theta, (dim,))
+    w = jax.random.normal(k_w, (num_workers, per, dim))
+    zeta = noise_std * jax.random.normal(k_z, (num_workers, per))
+    if heterogeneity > 0:
+        k1, k2 = jax.random.split(k_h)
+        scale_w = 1.0 + heterogeneity * jax.random.uniform(
+            k1, (num_workers, 1, 1), minval=-1.0, maxval=1.0)
+        scale_z = 1.0 + heterogeneity * jax.random.uniform(
+            k2, (num_workers, 1), minval=-1.0, maxval=1.0)
+        w = w * scale_w
+        zeta = zeta * scale_z
+    y = jnp.einsum("mnd,d->mn", w, theta_star) + zeta
+    return RegressionDataset(features=w, targets=y, theta_star=theta_star)
+
+
+def squared_loss(theta, batch) -> jax.Array:
+    """0.5 (<w, theta> - y)^2 averaged over the batch — the local empirical
+    risk f̄^(j) when batch = S_j."""
+    w, y = batch
+    pred = w @ theta
+    return 0.5 * jnp.mean((pred - y) ** 2)
+
+
+def worker_batches(ds: RegressionDataset):
+    """Pytree with leading worker axis, as robust_train.per_worker_grads
+    expects."""
+    return (ds.features, ds.targets)
+
+
+def centralized_erm(ds: RegressionDataset) -> jax.Array:
+    """Oracle: the failure-free centralized least-squares solution
+    (minimax-rate baseline sqrt(d/N) the paper compares against)."""
+    w = ds.features.reshape(-1, ds.dim)
+    y = ds.targets.reshape(-1)
+    sol, *_ = jnp.linalg.lstsq(w, y, rcond=None)
+    return sol

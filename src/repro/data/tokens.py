@@ -1,0 +1,80 @@
+"""Synthetic deterministic token / frame / patch pipelines.
+
+Real federated text corpora are a hardware/data gate (repro band <= 2); per
+the assignment we simulate them: reproducible synthetic streams whose shapes
+and dtypes match the real thing.  Three generators:
+
+* ``TokenStream``     — LM tokens with a Zipfian unigram + Markov bigram mix
+                        (so the loss is learnable, not pure noise).
+* ``frame_embeddings``— [audio] carve-out: precomputed conv-frontend frames.
+* ``patch_embeddings``— [vlm] carve-out: precomputed ViT patch embeddings.
+
+All are pure functions of (seed, step) => fully deterministic, resumable, and
+shardable: the worker axis is the leading dim so each data rank materializes
+only its own shard under pjit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStream:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    num_workers: int
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.global_batch % self.num_workers != 0:
+            raise ValueError("global_batch must divide evenly among workers")
+
+    @property
+    def per_worker(self) -> int:
+        return self.global_batch // self.num_workers
+
+    def batch(self, step: int):
+        """Returns dict(tokens=(m, B/m, T) int32, labels likewise).
+
+        Tokens follow a two-state mixture: a Zipf-ish unigram draw mixed with
+        a deterministic affine bigram map (t_{i+1} = (a t_i + c) % V) so that
+        next-token prediction has learnable structure.
+        """
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k_uni, k_mix, k_start = jax.random.split(key, 3)
+        shape = (self.num_workers, self.per_worker, self.seq_len)
+        # Zipf via inverse-CDF on uniform: rank ~ u^(-1/s) truncated.
+        u = jax.random.uniform(k_uni, shape, minval=1e-6, maxval=1.0)
+        zipf = jnp.clip((u ** (-0.7) - 1.0).astype(jnp.int32),
+                        0, self.vocab_size - 1)
+        start = jax.random.randint(k_start, shape[:2] + (1,),
+                                   0, self.vocab_size)
+        pos = jnp.arange(self.seq_len, dtype=jnp.int32)[None, None, :]
+        bigram = (start * 31 + pos * 7919) % self.vocab_size
+        mix = jax.random.bernoulli(k_mix, 0.5, shape)
+        tokens = jnp.where(mix, zipf, bigram).astype(jnp.int32)
+        labels = jnp.roll(tokens, -1, axis=-1)
+        return {"tokens": tokens, "labels": labels}
+
+
+def frame_embeddings(key, *, num_workers: int, per_worker: int,
+                     num_frames: int, d_model: int,
+                     dtype=jnp.bfloat16):
+    """[audio] stub: precomputed mel+conv frontend output (paper carve-out).
+    Shaped like SeamlessM4T's speech encoder input after feature extraction."""
+    x = jax.random.normal(key, (num_workers, per_worker, num_frames, d_model))
+    return x.astype(dtype)
+
+
+def patch_embeddings(key, *, num_workers: int, per_worker: int,
+                     num_patches: int, d_model: int,
+                     dtype=jnp.bfloat16):
+    """[vlm] stub: precomputed InternViT patch embeddings after the MLP
+    projector (paper carve-out)."""
+    x = jax.random.normal(key, (num_workers, per_worker, num_patches, d_model))
+    return x.astype(dtype)

@@ -1,0 +1,144 @@
+"""Pallas TPU kernel: blocked flash attention (causal / sliding-window GQA).
+
+The compute hot spot of every attention-family architecture.  Online-softmax
+blocked attention (Dao et al.) adapted to the TPU memory hierarchy:
+
+* grid = (batch x q_heads, q_blocks, kv_blocks); the TPU grid is executed
+  sequentially with the last axis minor, so the kv axis acts as the inner
+  accumulation loop, with running max/denominator/accumulator in VMEM
+  scratch (no HBM traffic for the O(Tq x Tk) score matrix — it never exists).
+* q/k/v tiles sit in VMEM; (block_q, block_kv) = (256, 256) by default at
+  f32 costs 256·128·4·3 ≈ 400 KiB for the tiles plus 256·128·4 scratch —
+  comfortably inside the ~16 MiB VMEM with double buffering, and the
+  (256, 128)·(128, 256) partial matmuls are MXU-shaped (multiples of 128 on
+  head_dim and both block dims).
+* GQA is handled in the k/v BlockSpec index maps (q head -> kv head =
+  h · KV // H) — kv tiles are never replicated in HBM.
+* sliding windows just tighten the per-element mask; fully-masked kv blocks
+  are wasted work in this baseline (skipping them is a recorded §Perf
+  candidate — see EXPERIMENTS.md).
+
+Validated in interpret mode against ref.py (= the model's attention path)
+over shape/dtype sweeps in tests/test_attention_kernel.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_KV = 256
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window: int | None, block_q: int,
+                  block_kv: int, num_kv_blocks: int, scale: float):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (bkv, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+    iq = pl.program_id(1)
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0)
+    k_pos = ik * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    mask = jnp.ones((block_q, block_kv), jnp.bool_)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                               # (bq,)
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_prev + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    sliding_window: int | None = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_kv: int = DEFAULT_BLOCK_KV,
+                    interpret: bool = False):
+    """q: (B, Tq, H, hd); k, v: (B, Tk, KV, hd) -> (B, Tq, H, hd).
+
+    H must be a multiple of KV (GQA).  Tq/Tk are padded to block multiples
+    internally; the causal mask makes padded kv positions unreachable for
+    real q rows, and padded q rows are sliced away.
+    """
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    assert H % KV == 0
+
+    block_q = min(block_q, max(Tq, 16))
+    block_kv = min(block_kv, max(Tk, 16))
+    pad_q = (-Tq) % block_q
+    pad_k = (-Tk) % block_kv
+
+    # layout: (B*H, T, hd) with heads folded into batch
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * H, Tq, hd)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * KV, Tk, hd)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * KV, Tk, hd)
+    if pad_q:
+        qh = jnp.pad(qh, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kh = jnp.pad(kh, ((0, 0), (0, pad_k), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pad_k), (0, 0)))
+    Tqp, Tkp = Tq + pad_q, Tk + pad_k
+    nq, nk = Tqp // block_q, Tkp // block_kv
+    G = H // KV
+
+    def kv_index(bh, iq, ik):
+        return ((bh // H) * KV + (bh % H) // G, ik, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=sliding_window,
+        block_q=block_q, block_kv=block_kv, num_kv_blocks=nk,
+        scale=hd ** -0.5)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_kv, hd), kv_index),
+            pl.BlockSpec((1, block_kv, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd),
+                               lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tqp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+
+    out = out[:, :Tq, :].reshape(B, H, Tq, hd)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,37 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+``attention(...)`` dispatches to the Pallas kernel on TPU and to the jnp
+reference elsewhere, so model code can call one entry point everywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention import flash, ref
+
+
+def default_use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "sliding_window", "block_q", "block_kv", "use_pallas",
+    "interpret"))
+def attention(q, k, v, *, causal: bool = True,
+              sliding_window: int | None = None,
+              block_q: int = flash.DEFAULT_BLOCK_Q,
+              block_kv: int = flash.DEFAULT_BLOCK_KV,
+              use_pallas: bool | None = None,
+              interpret: bool = False):
+    """q: (B, Tq, H, hd); k, v: (B, Tk, KV, hd) -> (B, Tq, H, hd)."""
+    use_pallas = default_use_pallas() if use_pallas is None else use_pallas
+    if use_pallas or interpret:
+        return flash.flash_attention(
+            q, k, v, causal=causal, sliding_window=sliding_window,
+            block_q=block_q, block_kv=block_kv, interpret=interpret)
+    return ref.flash_attention_ref(q, k, v, causal=causal,
+                                   sliding_window=sliding_window)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+The oracle IS the model's attention path (models.attention.attention_core),
+so kernel == model semantics by construction.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import attention_core
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        sliding_window: int | None = None):
+    """q: (B, Tq, H, hd); k, v: (B, Tk, KV, hd) -> (B, Tq, H, hd)."""
+    return attention_core(q, k, v, causal=causal,
+                          sliding_window=sliding_window)

@@ -1,0 +1,55 @@
+"""Jit'd public wrapper for the geomed kernel.
+
+``geometric_median_kernel`` runs the full Weiszfeld loop with the fused
+Pallas step.  On non-TPU backends (this container) the kernel runs in
+interpret mode inside tests; production entry points select the jnp path
+unless ``use_pallas`` is forced, mirroring kernels/attention/ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.geomed import geomed, ref
+
+
+def default_use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "use_pallas",
+                                             "interpret"))
+def geometric_median_kernel(points, weights=None, *, max_iters: int = 64,
+                            tol: float = 1e-8, use_pallas: bool | None = None,
+                            interpret: bool = False):
+    """(1+gamma)-approx geometric median of ``points`` (k, d) via Weiszfeld
+    with the fused Pallas step.  Drop-in for core.geometric_median."""
+    k, d = points.shape
+    if weights is None:
+        weights = jnp.ones((k,), jnp.float32)
+    use_pallas = default_use_pallas() if use_pallas is None else use_pallas
+
+    if use_pallas or interpret:
+        step = functools.partial(geomed.weiszfeld_step, interpret=interpret)
+    else:
+        step = ref.weiszfeld_step_ref
+
+    w_sum = jnp.maximum(jnp.sum(weights), 1e-12)
+    y0 = (weights @ points.astype(jnp.float32)) / w_sum
+
+    def cond(carry):
+        _, it, delta = carry
+        return jnp.logical_and(it < max_iters, delta > tol)
+
+    def body(carry):
+        y, it, _ = carry
+        y_new = step(points, y, weights)
+        return y_new, it + 1, jnp.linalg.norm(y_new - y)
+
+    y, _, _ = jax.lax.while_loop(
+        cond, body, (y0, jnp.zeros((), jnp.int32),
+                     jnp.array(jnp.inf, jnp.float32)))
+    return y

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the Weiszfeld-iteration kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def weiszfeld_distances_ref(points, y, *, eps: float = 1e-12):
+    """Squared-distance accumulation: ||z_i - y||^2 per point.
+    points: (k, d) f32, y: (d,) f32 -> (k,) f32."""
+    diff = points.astype(jnp.float32) - y.astype(jnp.float32)[None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def weiszfeld_reweight_ref(points, inv_weights):
+    """Weighted sum: sum_i w_i z_i.  points: (k, d), inv_weights: (k,)
+    -> (d,) f32 (normalization happens outside, it is O(k))."""
+    return jnp.einsum("k,kd->d", inv_weights.astype(jnp.float32),
+                      points.astype(jnp.float32))
+
+
+def weiszfeld_step_ref(points, y, weights, *, eps: float = 1e-12):
+    """One full Weiszfeld step (matches core.geometric_median.weiszfeld_step).
+    points: (k, d), y: (d,), weights: (k,) -> (d,)."""
+    sq = weiszfeld_distances_ref(points, y)
+    dist = jnp.sqrt(sq + eps * eps)
+    inv = weights.astype(jnp.float32) / dist
+    denom = jnp.maximum(jnp.sum(inv), eps)
+    return weiszfeld_reweight_ref(points, inv) / denom

@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes with 512 placeholder host devices.
+
+For each pair this lowers the real step function — group-mode robust
+train_step (train_4k), prefill forward (prefill_32k), or single-token
+serve_step (decode_32k / long_500k) — with full-size ShapeDtypeStruct inputs
+and the production shardings, compiles it, and records
+``memory_analysis``/``cost_analysis``/collective bytes for §Dry-run and
+§Roofline of EXPERIMENTS.md.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+
+NOTE: the XLA_FLAGS line above MUST run before any other import — jax locks
+the device count at first init (do not set this flag globally; smoke tests
+and benchmarks must see 1 device).
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHITECTURES, get_shape
+from repro.core import RobustConfig
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding, steps
+from repro.roofline import analysis
+from repro import optim
+
+
+def _mesh_name(mesh) -> str:
+    return "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+
+
+def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+                mesh=None, num_groups: int = 4, microbatches: int = 1,
+                fsdp: bool = True, verbose: bool = True,
+                return_artifacts: bool = False):
+    """Lower+compile one (arch, shape, mesh); returns a RooflineRecord."""
+    if mesh is None:
+        mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    cfg, shape, batch = steps.input_specs(arch, shape_name,
+                                          num_groups=num_groups)
+    num_chips = mesh.size
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        params_s = steps.abstract_params(cfg)
+        pshard = sharding.param_shardings(params_s, mesh, cfg, fsdp=fsdp)
+
+        if shape.kind == "train":
+            rc = RobustConfig(num_workers=num_groups, num_byzantine=1,
+                              num_batches=num_groups, aggregator="gmom",
+                              attack="sign_flip", gmom_max_iters=8)
+            opt = optim.adamw(3e-4)
+            opt_s = steps.abstract_opt_state(opt, params_s)
+            oshard = sharding.opt_state_shardings(opt_s, params_s, mesh,
+                                                  cfg, fsdp=fsdp)
+            bshard = sharding.batch_shardings(batch, mesh)
+            gshard = sharding.stacked_grad_shardings(params_s, mesh, cfg,
+                                                     fsdp=fsdp)
+            step_fn = steps.make_group_train_step(cfg, rc, opt,
+                                                  microbatches=microbatches,
+                                                  grad_shardings=gshard)
+            key_s = jax.ShapeDtypeStruct((2,), jax.numpy.uint32)
+            rep = sharding.replicated(mesh)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(pshard, oshard, bshard, rep, rep),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(
+                params_s, opt_s, batch, key_s,
+                jax.ShapeDtypeStruct((), jax.numpy.int32))
+            step_kind = "train_step"
+
+        elif shape.kind == "prefill":
+            bshard = jax.tree.map(
+                lambda x: jax.NamedSharding(
+                    mesh, jax.P(*((sharding.serve_batch_spec(
+                        mesh, shape.global_batch)[0],)
+                        + (None,) * (len(x.shape) - 1)))),
+                batch)
+            step_fn = steps.make_prefill_step(cfg)
+            jitted = jax.jit(step_fn, in_shardings=(pshard, bshard))
+            lowered = jitted.lower(params_s, batch)
+            step_kind = "prefill"
+
+        else:  # decode
+            tokens_s, positions_s, state_s = batch
+            sshard = sharding.decode_state_shardings(
+                state_s, mesh, cfg, shape.global_batch)
+            bspec = sharding.serve_batch_spec(mesh, shape.global_batch)
+            baxis = bspec[0] if len(bspec) else None
+            tshard = jax.NamedSharding(mesh, jax.P(baxis, None))
+            posshard = jax.NamedSharding(mesh, jax.P(baxis))
+            step_fn = steps.make_serve_step(cfg)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(pshard, sshard, tshard, posshard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_s, state_s, tokens_s, positions_s)
+            step_kind = "serve_step"
+
+        compiled = lowered.compile()
+
+    record = analysis.build_record(
+        arch=arch, shape=shape, cfg=cfg, mesh_name=_mesh_name(mesh),
+        num_chips=num_chips, step=step_kind, compiled=compiled)
+    if verbose:
+        mem = compiled.memory_analysis()
+        print(f"[dryrun] {arch} × {shape_name} × {_mesh_name(mesh)} "
+              f"({step_kind}) compiled in {time.time() - t0:.1f}s")
+        print(f"  memory_analysis: {mem}")
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e}")
+        print(f"  collectives: {record.collective_breakdown}")
+        print(f"  roofline: compute={record.compute_term:.3e}s "
+              f"memory={record.memory_term:.3e}s "
+              f"collective={record.collective_term:.3e}s "
+              f"-> {record.bottleneck}-bound "
+              f"(useful-FLOPs ratio {record.useful_flops_ratio:.2f})")
+    if return_artifacts:
+        return record, lowered, compiled
+    return record
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", choices=list(ARCHITECTURES))
+    p.add_argument("--shape", choices=["train_4k", "prefill_32k",
+                                       "decode_32k", "long_500k"])
+    p.add_argument("--all", action="store_true",
+                   help="run every (arch × shape) pair")
+    p.add_argument("--multi-pod", action="store_true",
+                   help="use the 2×16×16 multi-pod mesh")
+    p.add_argument("--num-groups", type=int, default=4,
+                   help="k — number of gradient batches (train shapes)")
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--no-fsdp", action="store_true")
+    p.add_argument("--out", default=None, help="write JSON records here")
+    args = p.parse_args(argv)
+
+    pairs = []
+    if args.all:
+        for arch in ARCHITECTURES:
+            for shape in ("train_4k", "prefill_32k", "decode_32k",
+                          "long_500k"):
+                pairs.append((arch, shape))
+    else:
+        if not (args.arch and args.shape):
+            p.error("--arch and --shape required unless --all")
+        pairs = [(args.arch, args.shape)]
+
+    records, failures = [], []
+    for arch, shape in pairs:
+        try:
+            records.append(dryrun_pair(
+                arch, shape, multi_pod=args.multi_pod,
+                num_groups=args.num_groups, microbatches=args.microbatches,
+                fsdp=not args.no_fsdp))
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((arch, shape, repr(e)))
+
+    if records:
+        print()
+        print(analysis.format_table(records))
+    if args.out:
+        analysis.save_records(records, args.out)
+        print(f"\nwrote {len(records)} records to {args.out}")
+    if failures:
+        print(f"\nFAILURES ({len(failures)}):")
+        for arch, shape, err in failures:
+            print(f"  {arch} × {shape}: {err}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

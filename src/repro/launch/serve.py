@@ -1,0 +1,85 @@
+"""Batched serving driver.
+
+* ``--scale cpu`` (default): actually serves — reduced config, batched
+  greedy decoding over synthetic prompts with throughput stats.
+* ``--scale pod``: dry-run lowering of the serve step for the decode shapes
+  on the production mesh (run via ``python -m repro.launch.dryrun`` which
+  sets the required XLA device flag).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-3-4b \
+        --batch 8 --new-tokens 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHITECTURES, get_config
+from repro.models import model as model_lib
+
+
+def serve_cpu(args):
+    cfg = get_config(args.arch).reduced()
+    if cfg.family == "hybrid":
+        cfg = cfg.with_(ssm_chunk=8)
+    params = model_lib.init(jax.random.PRNGKey(args.seed), cfg)
+    B = args.batch
+    max_len = args.prompt_len + args.new_tokens
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, args.prompt_len),
+                                 0, cfg.vocab_size)
+    state = model_lib.init_decode_state(cfg, B, max_len)
+    step = jax.jit(lambda s, t, p: model_lib.decode_step(params, cfg, s, t, p))
+
+    # prefill via decode steps (reference path)
+    logits = None
+    t0 = time.time()
+    for t in range(args.prompt_len):
+        logits, state = step(state, prompts[:, t:t + 1],
+                             jnp.full((B,), t, jnp.int32))
+    t_prefill = time.time() - t0
+
+    tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out = [tokens]
+    t0 = time.time()
+    for i in range(args.new_tokens - 1):
+        logits, state = step(state, tokens,
+                             jnp.full((B,), args.prompt_len + i, jnp.int32))
+        tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tokens)
+    dt = time.time() - t0
+    print(f"[serve] {args.arch}: prefill {args.prompt_len}tok in "
+          f"{t_prefill:.2f}s; decode {args.new_tokens}x{B} in {dt:.2f}s "
+          f"({B * args.new_tokens / max(dt, 1e-9):.1f} tok/s CPU)")
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="h2o-danube-3-4b",
+                   choices=list(ARCHITECTURES))
+    p.add_argument("--scale", default="cpu", choices=["cpu", "pod"])
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--new-tokens", type=int, default=32)
+    p.add_argument("--shape", default="decode_32k",
+                   choices=["decode_32k", "long_500k"])
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+    if args.scale == "cpu":
+        serve_cpu(args)
+    else:
+        import os
+        if "XLA_FLAGS" not in os.environ:
+            raise SystemExit("pod scale: run python -m repro.launch.dryrun "
+                             f"--arch {args.arch} --shape {args.shape}")
+        from repro.launch import dryrun
+        dryrun.dryrun_pair(args.arch, args.shape, multi_pod=args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,263 @@
+"""Sharding rules: param/activation/state -> mesh PartitionSpecs.
+
+Strategy (measurement-driven — see EXPERIMENTS.md §Perf iteration 1):
+
+* **Attention families (dense/moe/vlm/audio + hybrid's shared block):**
+  sequence parallelism.  The residual stream is T-sharded over ``model``
+  (models/attention.py shard_map region); attention/MLP weights are
+  *compute-replicated* over ``model`` and FSDP-sharded for storage.  Naive
+  GSPMD head sharding was measured at ~14 TB/device/step of score-tensor
+  all-reduces on qwen2-72b (GQA kv=8 < |model|=16 and non-divisible head
+  counts make head-TP unpartitionable); SP needs only the kv all-gather.
+* **SSM families (rwkv/zamba2-mamba):** the time recurrence forbids
+  T-sharding, but SSM head counts divide |model| (64, 80), so classic
+  head-/channel-TP applies: col-parallel in-projections, row-parallel
+  out-projections (one all-reduce per block).
+* **MoE experts:** E -> model (expert parallelism; matches the shard_map
+  in_specs in models/moe.py).  Router replicated.
+* **Vocab:** embed/unembed V -> model (Megatron vocab-parallel loss).
+* **Storage (FSDP):** optimizer state + master params shard their largest
+  divisible dim over ``data`` — or over (data × model) jointly when the
+  10 bytes/param footprint would not fit HBM on ``data`` alone (72B+).
+* **Decode caches:** the cache length dim S -> model (each model rank scores
+  its slice of the context; softmax combines with tiny psums), batch ->
+  data.  SSM decode states: heads -> model.
+* scan-stack leading dims (layers/groups) are never sharded.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch import mesh as mesh_lib
+
+_STACK_DIMS = {"layers": 1, "mamba": 2, "encoder": 1}
+
+# families whose attention runs sequence-parallel (weights replicated)
+SP_FAMILIES = ("dense", "moe", "vlm", "audio", "hybrid")
+
+
+def _divides(dim_size: int, axis_size: int) -> bool:
+    return axis_size > 0 and dim_size % axis_size == 0 \
+        and dim_size >= axis_size
+
+
+def storage_axes(cfg: ModelConfig | None, mesh) -> tuple:
+    """FSDP storage axes: data, or data+model for very large models."""
+    dd = mesh_lib.data_axes(mesh)
+    if cfg is None:
+        return dd
+    footprint = cfg.param_count() * 10  # bf16 params + f32 adam m,v
+    per_chip_data_only = footprint / mesh_lib.data_size(mesh)
+    if per_chip_data_only > 12e9:
+        return dd + ("model",)
+    return dd
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n
+
+
+def _fsdp_entry(axes):
+    if isinstance(axes, tuple) and len(axes) == 1:
+        return axes[0]
+    return axes
+
+
+def param_partition_spec(path, leaf, mesh, cfg: ModelConfig | None = None, *,
+                         fsdp: bool = True,
+                         min_fsdp_elems: int = 1 << 20) -> P:
+    names = [getattr(k, "key", str(k)) for k in path]
+    top = names[0] if names else ""
+    name = names[-1] if names else ""
+    skip = _STACK_DIMS.get(top, 0)
+    shape = leaf.shape
+    ndim = len(shape)
+    model_n = mesh.shape["model"] if "model" in mesh.axis_names else 0
+    spec = [None] * ndim
+    family = cfg.family if cfg is not None else None
+
+    def assign(dim, axis, axis_size) -> bool:
+        d = dim if dim >= 0 else ndim + dim
+        if d < skip or d >= ndim or spec[d] is not None:
+            return False
+        if not _divides(shape[d], axis_size):
+            return False
+        spec[d] = axis
+        return True
+
+    in_moe = "moe" in names
+    in_rwkv_tm = "time_mix" in names
+    in_rwkv_cm = "channel_mix" in names
+    in_mamba = top == "mamba"
+
+    # ------------------------------------------------------------- model axis
+    model_used = False
+    if model_n:
+        if in_moe:
+            if name == "router":
+                pass                                    # replicated
+            elif name in ("w_gate", "w_up", "w_down"):
+                model_used = assign(skip, "model", model_n)    # E -> model
+        elif in_rwkv_tm:
+            if name in ("wr", "wk", "wv", "wg"):
+                model_used = assign(-2, "model", model_n)      # H
+            elif name in ("wo",):
+                model_used = assign(-2, "model", model_n)      # H*hd (row)
+            elif name in ("w0", "u"):
+                model_used = assign(-2, "model", model_n)      # (H, hd)
+            elif name == "w_lora_b":
+                model_used = assign(-2, "model", model_n)      # (r, H, hd)
+            elif name in ("scale", "bias") and "ln_x" in names:
+                model_used = assign(-1, "model", model_n)      # (H*hd,)
+        elif in_rwkv_cm:
+            if name == "wk":
+                model_used = assign(-1, "model", model_n)      # F (col)
+            elif name == "wv":
+                model_used = assign(-2, "model", model_n)      # F (row)
+        elif in_mamba and family == "hybrid":
+            if name in ("w_z", "w_x"):
+                model_used = assign(-1, "model", model_n)      # Din (col)
+            elif name in ("conv_x",):
+                model_used = assign(-1, "model", model_n)      # Din channels
+            elif name == "w_out":
+                model_used = assign(-2, "model", model_n)      # Din (row)
+            elif name in ("A_log", "dt_bias", "D", "w_dt"):
+                model_used = assign(-1, "model", model_n)      # H
+            elif name == "scale" and "norm" in names:
+                model_used = assign(-1, "model", model_n)      # (Din,)
+        elif name in ("embed", "unembed"):
+            vocab_dim = -2 if name == "embed" else -1
+            model_used = assign(vocab_dim, "model", model_n)   # V -> model
+        elif name in ("w_gate", "w_up") and family in SP_FAMILIES:
+            model_used = assign(-1, "model", model_n)          # F (col TP)
+        elif name == "w_down" and family in SP_FAMILIES:
+            model_used = assign(-2, "model", model_n)          # F (row TP)
+        # SP families: attention weights stay model-replicated.
+
+    # ------------------------------------------------------------ FSDP storage
+    if fsdp and leaf.size >= min_fsdp_elems and cfg is not None:
+        axes = storage_axes(cfg, mesh)
+        # don't stack model storage onto leaves already TP-sharded
+        if model_used and "model" in axes:
+            axes = tuple(a for a in axes if a != "model")
+        if axes:
+            n = _axes_size(mesh, axes)
+            order = sorted(range(skip, ndim), key=lambda d: -shape[d])
+            for d in order:
+                if spec[d] is None and _divides(shape[d], n):
+                    spec[d] = _fsdp_entry(axes)
+                    break
+    return P(*spec)
+
+
+def param_shardings(params, mesh, cfg: ModelConfig | None = None, *,
+                    fsdp: bool = True):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [NamedSharding(mesh, param_partition_spec(p, l, mesh, cfg,
+                                                      fsdp=fsdp))
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def stacked_grad_shardings(params, mesh, cfg: ModelConfig | None = None, *,
+                           fsdp: bool = True):
+    """Shardings for the (k, *param) stacked per-group gradients: leading k
+    dim replicated, param dims keep the 2D param layout (DESIGN.md §4).
+    Constraining the scan output to this turns the cross-data gradient
+    reduction into a reduce-scatter aligned with the optimizer layout
+    instead of a full all-reduce (measured 1.16 TB/device/step of f32
+    all-reduce on kimi-k2 without it — EXPERIMENTS §Perf iteration 3)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for p, l in flat:
+        spec = param_partition_spec(p, l, mesh, cfg, fsdp=fsdp)
+        out.append(NamedSharding(mesh, P(None, *spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# activations / batches / decode state
+
+def train_batch_spec(mesh) -> P:
+    ax = mesh_lib.data_axes(mesh)
+    return P(None, ax if len(ax) > 1 else ax[0])
+
+
+def batch_shardings(batch, mesh):
+    spec = train_batch_spec(mesh)
+
+    def leaf(x):
+        nd = len(x.shape)
+        full = P(*(tuple(spec) + (None,) * (nd - 2)))
+        return NamedSharding(mesh, full)
+
+    return jax.tree.map(leaf, batch)
+
+
+def serve_batch_spec(mesh, batch_size: int) -> P:
+    ax = mesh_lib.data_axes(mesh)
+    axes = ax if len(ax) > 1 else ax[0]
+    if batch_size % mesh_lib.data_size(mesh) == 0:
+        return P(axes)
+    return P(None)
+
+
+def decode_state_shardings(state, mesh, cfg: ModelConfig, batch_size: int):
+    """KV caches (ndim 5: L,B,S,KV,hd): S -> model, B -> data.
+    SSM/conv states: a head/channel dim -> model, B -> data."""
+    bspec = serve_batch_spec(mesh, batch_size)
+    b_axis = bspec[0] if len(bspec) > 0 else None
+    model_n = mesh.shape["model"] if "model" in mesh.axis_names else 0
+
+    def leaf(x):
+        shape = x.shape
+        nd = len(shape)
+        spec = [None] * nd
+        b_dim = None
+        for d in range(nd):
+            if shape[d] == batch_size and b_axis is not None:
+                spec[d] = b_axis
+                b_dim = d
+                break
+        if model_n:
+            if nd >= 5 and b_dim is not None and b_dim + 1 < nd \
+                    and _divides(shape[b_dim + 1], model_n):
+                # attention cache (..., B, S, KV, hd): shard S
+                spec[b_dim + 1] = "model"
+            else:
+                # recurrent state: shard the first divisible feature dim
+                # after batch (heads/channels)
+                start = (b_dim + 1) if b_dim is not None else 0
+                for d in range(start, nd):
+                    if spec[d] is None and _divides(shape[d], model_n):
+                        spec[d] = "model"
+                        break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, state)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def opt_state_shardings(opt_state, params, mesh,
+                        cfg: ModelConfig | None = None, *, fsdp: bool = True):
+    pshard = param_shardings(params, mesh, cfg, fsdp=fsdp)
+    pflat = jax.tree.leaves(pshard)
+    leaves, treedef = jax.tree.flatten(opt_state)
+    by_shape = {}
+    pleaves = jax.tree.leaves(params)
+    for pl_, sh in zip(pleaves, pflat):
+        by_shape.setdefault(tuple(pl_.shape), sh)
+    out = []
+    for l in leaves:
+        sh = by_shape.get(tuple(l.shape))
+        out.append(sh if sh is not None and l.ndim > 0 else replicated(mesh))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,223 @@
+"""Production-scale train / serve steps and their abstract input specs.
+
+Two gradient paths implement the paper's Algorithm 2 (DESIGN.md §4):
+
+* **worker mode** (repro.core.robust_train) — one gradient per worker,
+  attack at worker granularity.  Faithful to the paper line-by-line; used at
+  experiment scale (the stacked (m, P) gradients are the paper server's
+  O(md) memory, impossible at 72B+).
+* **group mode** (here) — gradients computed directly per batch-group:
+  mean-of-means == pooled mean, so the k honest batch means are identical to
+  worker mode's (tests assert this), while peak memory drops from (m, P) to
+  (k, P) with the 2D param layout preserved.  Byzantine corruption is
+  injected at batch-mean granularity — exactly the quantity the analysis
+  bounds (at most q of k batches contaminated).  This is the path the
+  512-chip dry-run lowers.
+
+``input_specs`` provides ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_shape, long_context_variant
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import RobustConfig, byzantine
+from repro.core.geometric_median import (batch_mean_norms,
+                                         geometric_median_pytree,
+                                         trim_weights)
+from repro.models import model as model_lib
+
+
+# ---------------------------------------------------------------------------
+# batch construction
+
+def train_batch_struct(cfg: ModelConfig, shape: InputShape, num_groups: int):
+    """Abstract train batch: leaves (k, B/k, ...)."""
+    k = num_groups
+    if shape.global_batch % k != 0:
+        raise ValueError(f"global_batch={shape.global_batch} % k={k} != 0")
+    bg = shape.global_batch // k
+    T = shape.seq_len
+    i32 = jnp.int32
+
+    def arr(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if cfg.family == "vlm":
+        t_text = T - cfg.num_patches
+        return {
+            "tokens": arr((k, bg, t_text), i32),
+            "labels": arr((k, bg, t_text), i32),
+            "patches": arr((k, bg, cfg.num_patches, cfg.d_model), cfg.dtype),
+        }
+    if cfg.family == "audio":
+        t_enc = max(T // cfg.encoder_seq_divisor, 1)
+        return {
+            "tokens": arr((k, bg, T), i32),
+            "labels": arr((k, bg, T), i32),
+            "frames": arr((k, bg, t_enc, cfg.d_model), cfg.dtype),
+        }
+    return {"tokens": arr((k, bg, T), i32), "labels": arr((k, bg, T), i32)}
+
+
+def prefill_batch_struct(cfg: ModelConfig, shape: InputShape):
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def arr(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if cfg.family == "vlm":
+        return {"tokens": arr((B, T - cfg.num_patches), i32),
+                "patches": arr((B, cfg.num_patches, cfg.d_model), cfg.dtype)}
+    if cfg.family == "audio":
+        t_enc = max(T // cfg.encoder_seq_divisor, 1)
+        return {"tokens": arr((B, T), i32),
+                "frames": arr((B, t_enc, cfg.d_model), cfg.dtype)}
+    return {"tokens": arr((B, T), i32)}
+
+
+def decode_input_struct(cfg: ModelConfig, shape: InputShape):
+    """(tokens, positions, state) for one serve_step against a seq_len-deep
+    context."""
+    B, T = shape.global_batch, shape.seq_len
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    positions = jax.ShapeDtypeStruct((B,), jnp.int32)
+    state = jax.eval_shape(
+        lambda: model_lib.init_decode_state(cfg, B, T))
+    return tokens, positions, state
+
+
+def input_specs(arch_or_cfg, shape_name: str, *, num_groups: int = 4):
+    """The dry-run entry: abstract inputs for (arch, shape)."""
+    cfg = (arch_or_cfg if isinstance(arch_or_cfg, ModelConfig)
+           else get_config(arch_or_cfg))
+    shape = get_shape(shape_name)
+    if shape.name == "long_500k":
+        cfg = long_context_variant(cfg)
+    if shape.kind == "train":
+        return cfg, shape, train_batch_struct(cfg, shape, num_groups)
+    if shape.kind == "prefill":
+        return cfg, shape, prefill_batch_struct(cfg, shape)
+    return cfg, shape, decode_input_struct(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# abstract params / optimizer state
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(model_lib.init, cfg=cfg), jax.random.key(0))
+
+
+def abstract_opt_state(optimizer, params_struct):
+    return jax.eval_shape(optimizer.init, params_struct)
+
+
+# ---------------------------------------------------------------------------
+# steps
+
+def make_group_train_step(cfg: ModelConfig, rc: RobustConfig, optimizer, *,
+                          microbatches: int = 1, grad_shardings=None):
+    """Group-mode robust train step (the production/dry-run path).
+
+    rc.num_workers is interpreted as k (the number of batches); the attack
+    mask has k entries with rc.num_byzantine contaminated batches.
+    ``grad_shardings`` (optional pytree of NamedSharding for the stacked
+    (k, *param) gradients) anchors the scan output so the cross-data
+    gradient reduction lowers as reduce-scatter into the optimizer layout.
+    """
+    k = rc.num_workers
+
+    def group_value_and_grad(params, group_batch):
+        if microbatches == 1:
+            return jax.value_and_grad(model_lib.loss_fn)(
+                params, group_batch, cfg)
+
+        def reshape(x):
+            n = x.shape[0]
+            assert n % microbatches == 0
+            return x.reshape((microbatches, n // microbatches) + x.shape[1:])
+
+        mb = jax.tree.map(reshape, group_batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def mb_step(carry, b):
+            g_acc, l_acc = carry
+            l, g = jax.value_and_grad(model_lib.loss_fn)(params, b, cfg)
+            g_acc = jax.tree.map(
+                lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+            return (g_acc, l_acc + l), None
+
+        (g, l), _ = jax.lax.scan(
+            mb_step, (zero, jnp.zeros((), jnp.float32)), mb)
+        inv = 1.0 / microbatches
+        return l * inv, jax.tree.map(lambda x: x * inv, g)
+
+    attack = byzantine.get_attack(rc.attack)
+    attack_kwargs = dict(rc.attack_kwargs)
+
+    def train_step(params, opt_state, batch, key, round_index):
+        # sequential scan over the k batch-groups (gradient accumulation
+        # with per-group gradients kept separate): one group's activations
+        # live at a time, and shard_map regions (MoE EP) stay legal.  Each
+        # group is itself data-parallel over the full data axis.
+        def group_step(_, group_batch):
+            loss, grad = group_value_and_grad(params, group_batch)
+            return None, (loss, grad)
+
+        _, (losses, grads) = jax.lax.scan(group_step, None, batch)
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        mask = byzantine.sample_byzantine_mask(
+            key, k, rc.num_byzantine, rotate=rc.rotate_byzantine,
+            round_index=round_index)
+        reported = attack(grads, mask, key, **attack_kwargs)
+        weights = None
+        if rc.trim_multiplier is not None:
+            norms = batch_mean_norms(reported)
+            weights = trim_weights(norms, multiplier=rc.trim_multiplier)
+        agg = geometric_median_pytree(
+            reported, weights=weights, max_iters=rc.gmom_max_iters,
+            tol=rc.gmom_tol)
+        updates, opt_state = optimizer.update(agg, opt_state, params)
+        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                              params, updates)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(agg)))
+        metrics = {"loss_mean": jnp.mean(losses),
+                   "loss_median": jnp.median(losses),
+                   "agg_grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_mean_train_step(cfg: ModelConfig, optimizer, *,
+                         microbatches: int = 1):
+    """Failure-free baseline (paper Algorithm 1 at production scale):
+    identical pipeline with k=1, mean aggregation, no attack."""
+    rc = RobustConfig(num_workers=1, num_byzantine=0, num_batches=1,
+                      aggregator="mean", attack="none", trim_multiplier=None)
+    return make_group_train_step(cfg, rc, optimizer,
+                                 microbatches=microbatches)
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return model_lib.prefill(params, cfg, batch)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, state, tokens, positions):
+        return model_lib.decode_step(params, cfg, state, tokens, positions)
+    return serve_step

@@ -1,0 +1,220 @@
+"""Mamba2 (SSD) block for the Zamba2 hybrid (arXiv:2411.15242 / Mamba2 SSD).
+
+State-space recurrence with per-head scalar decay:
+
+    h_t = a_t h_{t-1} + dt_t B_t x_t^T        a_t = exp(-dt_t A_h) in (0,1)
+    y_t = C_t . h_t + D_h x_t
+
+computed with the **chunked SSD algorithm** (the TPU-native form — see
+DESIGN.md §3): the sequence is split into chunks of length ``chunk``; within
+a chunk the contribution is a masked (L×L) "attention-like" matmul (MXU
+friendly), across chunks a short ``lax.scan`` carries the (H, P, N) state.
+This avoids both the T-step sequential scan (latency) and the
+``associative_scan`` formulation (materializes T copies of the state —
+~85 GB/device at zamba2 train_4k scale).
+
+TP adaptation: the in-projection is stored as separate per-component
+matrices (w_z, w_x, w_B, w_C, w_dt) rather than mamba's fused ``in_proj`` —
+mathematically identical, but the z/x columns shard cleanly over ``model``
+on head boundaries (Din/|model| = 5 heads/rank on zamba2) while the small
+B/C/dt projections stay replicated.  The (B,nC,L,L,H) decay mask is then
+H-sharded, so no head-blocking loop is needed.
+
+Decode carries (conv states, ssm_state (B, H, P, N)) — O(1) in context,
+which is why zamba2 runs long_500k natively.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaSpec:
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init(key, spec: MambaSpec, *, dtype):
+    D, Din, N, H = spec.d_model, spec.d_inner, spec.d_state, spec.num_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_z": layers.dense_init(ks[0], D, Din, dtype=dtype),
+        "w_x": layers.dense_init(ks[1], D, Din, dtype=dtype),
+        "w_B": layers.dense_init(ks[2], D, N, dtype=dtype),
+        "w_C": layers.dense_init(ks[3], D, N, dtype=dtype),
+        "w_dt": layers.dense_init(ks[4], D, H, dtype=dtype),
+        "conv_x": layers.truncated_normal_init(
+            ks[5], (spec.conv_kernel, Din), 0.1, dtype),
+        "conv_x_b": jnp.zeros((Din,), dtype),
+        "conv_B": layers.truncated_normal_init(
+            ks[6], (spec.conv_kernel, N), 0.1, dtype),
+        "conv_B_b": jnp.zeros((N,), dtype),
+        "conv_C": layers.truncated_normal_init(
+            jax.random.fold_in(ks[6], 1), (spec.conv_kernel, N), 0.1, dtype),
+        "conv_C_b": jnp.zeros((N,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),     # A = exp(A_log) >= 1
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": layers.rmsnorm_init(Din, dtype=dtype),
+        "w_out": layers.dense_init(
+            jax.random.fold_in(ks[5], 1), Din, D, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, *, state=None):
+    """Depthwise causal conv over time.  x: (B, T, C); w: (K, C).
+    ``state`` (B, K-1, C) prepends history (decode); returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, T+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(K))
+    y = y + b[None, None, :]
+    return (jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype),
+            xp[:, -(K - 1):, :])
+
+
+def _ssd_chunked(x, dt, A, B_mat, C_mat, spec: MambaSpec, *,
+                 init_state=None):
+    """Chunked SSD.  Shapes:
+        x (B, T, H, P), dt (B, T, H), A (H,), B_mat/C_mat (B, T, N).
+    Returns (y (B, T, H, P), final_state (B, H, P, N)) in f32.
+    """
+    Bsz, T, H, P = x.shape
+    N = B_mat.shape[-1]
+    L = min(spec.chunk, T)
+    assert T % L == 0, f"T={T} must be divisible by chunk={L}"
+    nC = T // L
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nC, L, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nC, L, H)
+    Bf = B_mat.astype(jnp.float32).reshape(Bsz, nC, L, N)
+    Cf = C_mat.astype(jnp.float32).reshape(Bsz, nC, L, N)
+
+    log_a = -dtf * A[None, None, None, :]             # (B, nC, L, H) <= 0
+    acum = jnp.cumsum(log_a, axis=2)                  # inclusive
+    dtx = dtf[..., None] * xf                         # (B, nC, L, H, P)
+
+    scores = jnp.einsum("bcln,bcmn->bclm", Cf, Bf)    # (B, nC, L, L)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    # intra-chunk: masked decay "attention" (H-sharded over `model` under TP)
+    decay = jnp.exp(acum[:, :, :, None, :] - acum[:, :, None, :, :])
+    decay = jnp.where(causal[None, None, :, :, None], decay, 0.0)
+    y_intra = jnp.einsum("bclm,bclmh,bcmhp->bclhp", scores, decay, dtx)
+    # state injected by each chunk, decayed to chunk end
+    decay_end = jnp.exp(acum[:, :, -1:, :] - acum)    # (B, nC, L, H)
+    S_chunk = jnp.einsum("bclh,bcln,bclhp->bchpn", decay_end, Bf, dtx)
+
+    # inter-chunk recurrence
+    a_total = jnp.exp(acum[:, :, -1, :])              # (B, nC, H)
+
+    def chunk_step(S, inputs):
+        a_c, S_c = inputs
+        return a_c[..., None, None] * S + S_c, S      # emit state ENTERING
+
+    final_state, S_prev = jax.lax.scan(
+        chunk_step, init_state,
+        (jnp.moveaxis(a_total, 1, 0), jnp.moveaxis(S_chunk, 1, 0)))
+    S_prev = jnp.moveaxis(S_prev, 0, 1)               # (B, nC, H, P, N)
+
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp", Cf, jnp.exp(acum), S_prev)
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
+    return y, final_state
+
+
+def _project(params, spec: MambaSpec, x, conv_state):
+    """Shared by apply/decode: projections + causal convs + dt.
+    conv_state: None or dict of per-component conv states."""
+    p = params
+    z = jnp.einsum("btd,di->bti", x, p["w_z"])
+    xs = jnp.einsum("btd,di->bti", x, p["w_x"])
+    B_mat = jnp.einsum("btd,dn->btn", x, p["w_B"])
+    C_mat = jnp.einsum("btd,dn->btn", x, p["w_C"])
+    dt = jnp.einsum("btd,dh->bth", x, p["w_dt"])
+
+    cs = conv_state or {}
+    xs, cx = _causal_conv(xs, p["conv_x"], p["conv_x_b"],
+                          state=cs.get("x"))
+    B_mat, cb = _causal_conv(B_mat, p["conv_B"], p["conv_B_b"],
+                             state=cs.get("B"))
+    C_mat, cc = _causal_conv(C_mat, p["conv_C"], p["conv_C_b"],
+                             state=cs.get("C"))
+    new_conv = {"x": cx, "B": cb, "C": cc}
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    return z, xs, B_mat, C_mat, dt, new_conv
+
+
+def apply(params, spec: MambaSpec, x, *, conv_state=None, ssm_state=None):
+    """Full Mamba2 block (train / prefill).  x: (B, T, D).
+    Returns (out (B, T, D), (new_conv_state, new_ssm_state))."""
+    p = params
+    Bsz, T, D = x.shape
+    Din, H, P = spec.d_inner, spec.num_heads, spec.head_dim
+
+    z, xs, B_mat, C_mat, dt, new_conv = _project(params, spec, x, conv_state)
+    A = jnp.exp(p["A_log"])
+    xh = xs.reshape(Bsz, T, H, P)
+    y, new_ssm = _ssd_chunked(xh, dt, A, B_mat, C_mat, spec,
+                              init_state=ssm_state)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, T, Din).astype(x.dtype)
+    y = layers.rmsnorm(p["norm"], y)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bti,id->btd", y, p["w_out"]), (new_conv, new_ssm)
+
+
+def decode_step(params, spec: MambaSpec, x, conv_state, ssm_state):
+    """Single-token decode.  x: (B, 1, D).  Exact recurrence (T=1)."""
+    p = params
+    Bsz, _, D = x.shape
+    Din, N, H, P = spec.d_inner, spec.d_state, spec.num_heads, spec.head_dim
+
+    z, xs, B_mat, C_mat, dt, new_conv = _project(params, spec, x, conv_state)
+    A = jnp.exp(p["A_log"])
+    a = jnp.exp(-dt[:, 0] * A[None, :])                               # (B,H)
+    xh = xs[:, 0].reshape(Bsz, H, P).astype(jnp.float32)
+    Bf = B_mat[:, 0].astype(jnp.float32)
+    Cf = C_mat[:, 0].astype(jnp.float32)
+
+    inject = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0], xh, Bf)
+    new_ssm = a[..., None, None] * ssm_state + inject
+    y = jnp.einsum("bn,bhpn->bhp", Cf, new_ssm)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(Bsz, 1, Din).astype(x.dtype)
+    y = layers.rmsnorm(p["norm"], y)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bti,id->btd", y, p["w_out"]), (new_conv, new_ssm)
+
+
+def init_states(spec: MambaSpec, batch: int, *, dtype):
+    conv = {
+        "x": jnp.zeros((batch, spec.conv_kernel - 1, spec.d_inner), dtype),
+        "B": jnp.zeros((batch, spec.conv_kernel - 1, spec.d_state), dtype),
+        "C": jnp.zeros((batch, spec.conv_kernel - 1, spec.d_state), dtype),
+    }
+    ssm = jnp.zeros((batch, spec.num_heads, spec.head_dim, spec.d_state),
+                    jnp.float32)
+    return conv, ssm

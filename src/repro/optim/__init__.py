@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (  # noqa: F401
+    AdamState,
+    Optimizer,
+    SGDState,
+    adamw,
+    paper_gd,
+    sgd,
+)
+from repro.optim import schedule  # noqa: F401

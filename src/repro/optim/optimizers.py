@@ -1,0 +1,125 @@
+"""Pure-pytree optimizers (no external deps).
+
+Interface (optax-like, minimal):
+
+    opt = sgd(lr)                        # or adamw(...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = jax.tree.map(lambda p, u: p + u, params, updates)
+
+The paper's algorithm is plain GD with fixed step eta = L/(2M^2); ``sgd``
+with a constant schedule is the paper-faithful choice.  AdamW is provided for
+the LM-scale substrate (and is what the assigned-architecture configs use).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]   # step -> lr
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Any   # pytree or () when momentum == 0
+
+
+def sgd(learning_rate, *, momentum: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    """Plain (momentum) SGD.  momentum=0 == the paper's gradient descent."""
+    sched = _as_schedule(learning_rate)
+
+    def init(params):
+        mom = (jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+               if momentum else ())
+        return SGDState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def update(grads, state: SGDState, params=None):
+        del params
+        lr = sched(state.step)
+        if momentum:
+            new_mom = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state.momentum, grads)
+            vec = (jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                new_mom, grads) if nesterov else new_mom)
+            updates = jax.tree.map(lambda v: (-lr * v), vec)
+            return updates, SGDState(step=state.step + 1, momentum=new_mom)
+        updates = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
+        return updates, SGDState(step=state.step + 1, momentum=())
+
+    return Optimizer(name="sgd", init=init, update=update)
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw(learning_rate, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          grad_clip_norm: float | None = None) -> Optimizer:
+    """AdamW with optional global-norm gradient clipping.
+
+    The moments are f32 regardless of param dtype (mixed-precision practice:
+    bf16 params, f32 optimizer state)."""
+    sched = _as_schedule(learning_rate)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree.map(zeros, params),
+                         nu=jax.tree.map(zeros, params))
+
+    def update(grads, state: AdamState, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip_norm is not None:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                                 for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, grad_clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        count = state.step + 1
+        lr = sched(state.step)
+        bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          state.nu, grads)
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(jnp.float32)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamState(step=count, mu=mu, nu=nu)
+
+    return Optimizer(name="adamw", init=init, update=update)
+
+
+def paper_gd(problem_constants) -> Optimizer:
+    """The paper's fixed-step GD: eta = L / (2 M^2) (Theorem 1)."""
+    return sgd(problem_constants.step_size)

@@ -1,0 +1,10 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    RooflineRecord,
+    build_record,
+    collective_bytes,
+    format_table,
+    model_flops,
+)

@@ -1,0 +1,197 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Terms per (arch × shape × mesh), computed from the *per-device* partitioned
+HLO (jax's ``compiled.cost_analysis()`` / ``as_text()`` describe the
+SPMD-partitioned per-device module, so every term below is per-chip; the
+assignment's ``X/(chips × BW)`` formulas reduce to exactly this once X is
+understood as the global quantity = chips × per-device):
+
+    compute_term    = per_device_FLOPs / PEAK_FLOPS
+    memory_term     = per_device_bytes_accessed / HBM_BW
+    collective_term = per_device_collective_bytes / ICI_BW
+
+collective bytes are parsed from the HLO text: the result-shape bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (cost_analysis does not expose them).
+
+Hardware constants (assignment): TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shapes like  f32[8,128]{1,0}  or  bf16[2,4,8]
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# instruction line:  %name = <result shapes> <op-name>(
+_INSTR_RE = re.compile(
+    r"=\s*(.*?)\s(" + "|".join(_COLLECTIVES) + r")(?:-(?:start|done))?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-op result bytes summed over the module.
+
+    ``-start``/``-done`` async pairs are counted once (on -start)."""
+    out = {op: 0 for op in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if m is None:
+            continue
+        if "-done(" in line:           # async completion: already counted
+            continue
+        result_part, op = m.group(1), m.group(2)
+        out[op] += _shape_bytes(result_part)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineRecord:
+    arch: str
+    shape: str
+    mesh: str
+    step: str
+    flops_per_device: float           # trip-count-corrected dot FLOPs
+    bytes_per_device: float           # trip-count-corrected bytes accessed
+    collective_bytes_per_device: float  # trip-count-corrected
+    collective_breakdown: dict
+    peak_memory_bytes: float | None
+    model_flops_global: float
+    num_chips: int
+    # raw XLA cost_analysis numbers (while bodies counted ONCE — kept for
+    # cross-checking the parser; see hlo_parser docstring)
+    xla_flops_raw: float = 0.0
+    xla_bytes_raw: float = 0.0
+
+    @property
+    def compute_term(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_term(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_term(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_term, "memory": self.memory_term,
+                 "collective": self.collective_term}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (chips × per-device HLO flops): how much of compiled
+        compute is 'useful' (catches remat/redundancy waste).  > 1 means the
+        compiler did *less* than the analytic count (e.g. decode reads)."""
+        total = self.flops_per_device * self.num_chips
+        return self.model_flops_global / total if total else float("nan")
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(compute_term=self.compute_term,
+                 memory_term=self.memory_term,
+                 collective_term=self.collective_term,
+                 bottleneck=self.bottleneck,
+                 useful_flops_ratio=self.useful_flops_ratio)
+        return d
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D for training (N = active params,
+    D = tokens), 2·N·D for inference forward passes."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def build_record(*, arch: str, shape, cfg, mesh_name: str, num_chips: int,
+                 step: str, compiled, lowered=None) -> RooflineRecord:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):        # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        peak = float(getattr(mem, "temp_size_in_bytes", 0)
+                     + getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "output_size_in_bytes", 0)
+                     - getattr(mem, "alias_size_in_bytes", 0))
+    except Exception:
+        peak = None
+    text = compiled.as_text()
+    from repro.roofline import hlo_parser
+    hc = hlo_parser.analyze(text)
+    return RooflineRecord(
+        arch=arch, shape=shape.name, mesh=mesh_name, step=step,
+        flops_per_device=hc.dot_flops,
+        bytes_per_device=hc.bytes_accessed,
+        collective_bytes_per_device=hc.collective_bytes,
+        collective_breakdown=dict(hc.collective_breakdown),
+        peak_memory_bytes=peak,
+        model_flops_global=model_flops(cfg, shape),
+        num_chips=num_chips,
+        xla_flops_raw=flops,
+        xla_bytes_raw=nbytes,
+    )
+
+
+def format_table(records: list[RooflineRecord]) -> str:
+    header = ("| arch | shape | mesh | step | compute s | memory s | "
+              "collective s | bottleneck | useful-FLOPs | peak GiB/chip |")
+    sep = "|" + "---|" * 10
+    rows = [header, sep]
+    for r in records:
+        peak = (f"{r.peak_memory_bytes / 2**30:.2f}"
+                if r.peak_memory_bytes else "n/a")
+        rows.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.step} "
+            f"| {r.compute_term:.3e} | {r.memory_term:.3e} "
+            f"| {r.collective_term:.3e} | {r.bottleneck} "
+            f"| {r.useful_flops_ratio:.2f} | {peak} |")
+    return "\n".join(rows)
+
+
+def save_records(records: list[RooflineRecord], path: str):
+    with open(path, "w") as f:
+        json.dump([r.to_dict() for r in records], f, indent=1)
+
+
+def load_records(path: str) -> list[dict]:
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches must see the single real CPU device; only the
+# dry-run (repro.launch.dryrun / subprocess tests) sets the 512-device flag.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

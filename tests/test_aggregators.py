@@ -1,0 +1,121 @@
+"""Aggregator registry: semantics + robustness under every attack."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregators, byzantine, RobustConfig, aggregate
+
+
+def _stacked(m=8, d=5, seed=0, loc=1.0, scale=0.05):
+    rng = np.random.default_rng(seed)
+    g = (rng.normal(size=(m, d)) * scale + loc).astype(np.float32)
+    return {"w": jnp.asarray(g)}
+
+
+def test_registry_contents():
+    names = aggregators.available()
+    for expected in ["mean", "gmom", "geomed", "coordinate_median",
+                     "trimmed_mean", "krum", "norm_clip_mean",
+                     "gmom_per_leaf"]:
+        assert expected in names
+    with pytest.raises(KeyError):
+        aggregators.get_aggregator("nope")
+
+
+def test_gmom_k1_equals_mean():
+    s = _stacked()
+    gm = aggregators.gmom_aggregator(s, num_batches=1)
+    mean = aggregators.mean_aggregator(s)
+    np.testing.assert_allclose(np.asarray(gm["w"]), np.asarray(mean["w"]),
+                               atol=1e-6)
+
+
+def test_gmom_km_equals_geomed():
+    s = _stacked(m=6)
+    gm = aggregators.gmom_aggregator(s, num_batches=6, trim_multiplier=None,
+                                     max_iters=128, tol=1e-10)
+    ge = aggregators.geomed_aggregator(s, max_iters=128, tol=1e-10)
+    np.testing.assert_allclose(np.asarray(gm["w"]), np.asarray(ge["w"]),
+                               atol=1e-4)
+
+
+def test_batch_means_structure():
+    s = _stacked(m=8)
+    means = aggregators.batch_means(s, 4)
+    assert means["w"].shape == (4, 5)
+    np.testing.assert_allclose(
+        np.asarray(means["w"][0]), np.asarray(jnp.mean(s["w"][:2], axis=0)),
+        atol=1e-6)
+
+
+def test_mean_breaks_all_robust_survive():
+    """The paper's core comparison: one Byzantine machine skews the mean
+    arbitrarily (§1.3 BGD), but GMoM & friends stay near the honest value."""
+    m, d = 8, 5
+    s = _stacked(m, d)
+    mask = jnp.arange(m) < 2
+    corrupted = byzantine.sign_flip_attack(s, mask, jax.random.PRNGKey(0),
+                                           scale=100.0)
+    mean = aggregators.mean_aggregator(corrupted)
+    assert float(jnp.linalg.norm(mean["w"] - 1.0)) > 5.0
+    for name in ["gmom", "geomed", "coordinate_median", "trimmed_mean",
+                 "krum"]:
+        agg = aggregators.get_aggregator(name)
+        out = agg(corrupted, num_byzantine=2, num_batches=8)
+        err = float(jnp.linalg.norm(out["w"] - 1.0))
+        assert err < 0.5, f"{name} failed: {err}"
+
+
+@pytest.mark.parametrize("attack", byzantine.available())
+def test_gmom_survives_every_attack(attack):
+    m = 12
+    s = _stacked(m)
+    cfg = RobustConfig(num_workers=m, num_byzantine=2, attack=attack,
+                       aggregator="gmom", num_batches=6)
+    out = aggregate(s, cfg, key=jax.random.PRNGKey(3), round_index=0)
+    err = float(jnp.linalg.norm(out["w"] - 1.0))
+    assert err < 0.5, f"gmom under {attack}: err={err}"
+
+
+def test_gmom_breaks_beyond_half_batches():
+    """Breakdown point: with > k/2 contaminated batches the median can be
+    dragged (Lemma 1's alpha < 1/2 requirement is tight)."""
+    m = 8
+    s = _stacked(m)
+    mask = jnp.arange(m) < 5          # 5 of 8 workers => 5 of 8 batches
+    corrupted = byzantine.mean_shift_attack(s, mask, jax.random.PRNGKey(0),
+                                            scale=100.0)
+    out = aggregators.gmom_aggregator(corrupted, num_batches=8,
+                                      trim_multiplier=None)
+    assert float(jnp.linalg.norm(out["w"] - 1.0)) > 1.0
+
+
+def test_trimming_defeats_huge_norm_outliers():
+    m = 8
+    s = _stacked(m)
+    mask = jnp.arange(m) < 3
+    corrupted = byzantine.random_noise_attack(s, mask, jax.random.PRNGKey(1),
+                                              scale=1e6)
+    out = aggregators.gmom_aggregator(corrupted, num_batches=8,
+                                      trim_multiplier=3.0)
+    assert float(jnp.linalg.norm(out["w"] - 1.0)) < 0.5
+
+
+def test_gmom_per_leaf_close_to_global_on_honest():
+    s = {"a": _stacked(8, 3, seed=1)["w"], "b": _stacked(8, 4, seed=2)["w"]}
+    g1 = aggregators.gmom_aggregator(s, num_batches=4, trim_multiplier=None)
+    g2 = aggregators.gmom_per_leaf_aggregator(s, num_batches=4)
+    for k in s:
+        assert float(jnp.linalg.norm(g1[k] - g2[k])) < 0.1
+
+
+def test_krum_selects_honest_worker():
+    m = 8
+    s = _stacked(m)
+    mask = jnp.arange(m) < 2
+    corrupted = byzantine.random_noise_attack(s, mask, jax.random.PRNGKey(2),
+                                              scale=100.0)
+    out = aggregators.krum_aggregator(corrupted, num_byzantine=2)
+    assert float(jnp.linalg.norm(out["w"] - 1.0)) < 0.5

@@ -1,0 +1,94 @@
+"""Attack zoo invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import byzantine
+
+
+def _stacked(m=8, d=4):
+    return {"w": jnp.ones((m, d)),
+            "b": {"x": jnp.full((m, 2), 2.0)}}
+
+
+@pytest.mark.parametrize("attack", byzantine.available())
+def test_honest_rows_untouched(attack):
+    """Attacks may only modify rows where the mask is True (the paper's
+    constraint: Byzantine machines lie in their reports; honest machines'
+    reports arrive intact)."""
+    m = 8
+    s = _stacked(m)
+    mask = jnp.array([True, False] * 4)
+    out = byzantine.get_attack(attack)(s, mask, jax.random.PRNGKey(0))
+    for leaf_out, leaf_in in zip(jax.tree.leaves(out), jax.tree.leaves(s)):
+        honest = np.asarray(leaf_out)[~np.asarray(mask)]
+        expected = np.asarray(leaf_in)[~np.asarray(mask)]
+        np.testing.assert_array_equal(honest, expected)
+
+
+@pytest.mark.parametrize("attack", byzantine.available())
+def test_shapes_and_dtypes_preserved(attack):
+    s = _stacked()
+    mask = jnp.array([True] * 2 + [False] * 6)
+    out = byzantine.get_attack(attack)(s, mask, jax.random.PRNGKey(1))
+    assert jax.tree.structure(out) == jax.tree.structure(s)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(s)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+def test_none_attack_identity():
+    s = _stacked()
+    out = byzantine.none_attack(s, jnp.ones((8,), bool), jax.random.PRNGKey(0))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(s)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mask_exactly_q():
+    for q in [0, 1, 3, 8]:
+        mask = byzantine.sample_byzantine_mask(
+            jax.random.PRNGKey(0), 8, q, rotate=True, round_index=5)
+        assert int(jnp.sum(mask)) == q
+
+
+def test_mask_rotates_across_rounds():
+    masks = [np.asarray(byzantine.sample_byzantine_mask(
+        jax.random.PRNGKey(0), 16, 4, rotate=True, round_index=r))
+        for r in range(8)]
+    assert any(not np.array_equal(masks[0], m) for m in masks[1:])
+
+
+def test_mask_fixed_mode():
+    mask = byzantine.sample_byzantine_mask(
+        jax.random.PRNGKey(0), 8, 3, rotate=False)
+    np.testing.assert_array_equal(
+        np.asarray(mask), [True] * 3 + [False] * 5)
+
+
+def test_sign_flip_flips():
+    s = {"w": jnp.ones((4, 3))}
+    mask = jnp.array([True, False, False, False])
+    out = byzantine.sign_flip_attack(s, mask, jax.random.PRNGKey(0),
+                                     scale=10.0)
+    np.testing.assert_allclose(np.asarray(out["w"][0]), -10.0)
+
+
+def test_mean_shift_skews_average():
+    m = 8
+    s = {"w": jnp.ones((m, 3))}
+    mask = jnp.arange(m) < 2
+    out = byzantine.mean_shift_attack(s, mask, jax.random.PRNGKey(0),
+                                      scale=100.0)
+    mean = jnp.mean(out["w"], axis=0)
+    assert float(jnp.min(mean)) > 50.0   # mean moved by ~scale
+
+
+def test_omniscient_attacks_jit():
+    s = _stacked()
+    mask = jnp.array([True] * 2 + [False] * 6)
+    for name in ["inner_product", "colluding_mimic", "anti_aggregation"]:
+        fn = byzantine.get_attack(name)
+        out = jax.jit(lambda s_, m_, k_: fn(s_, m_, k_))(
+            s, mask, jax.random.PRNGKey(2))
+        assert bool(jnp.all(jnp.isfinite(out["w"])))

@@ -1,0 +1,98 @@
+"""Audit: every assigned architecture config matches the assignment table
+exactly, and the shape table matches the four assigned input shapes."""
+
+import pytest
+
+from repro.configs import ARCHITECTURES, get_config, get_shape, \
+    long_context_variant, supports_long_context
+
+# (arch, family, L, d_model, H, kv, d_ff, vocab, extras)
+ASSIGNMENT = {
+    "qwen2-72b": ("dense", 80, 8192, 64, 8, 29568, 152064,
+                  {"qkv_bias": True}),
+    "rwkv6-7b": ("ssm", 32, 4096, 0, 0, 14336, 65536, {}),
+    "qwen3-14b": ("dense", 40, 5120, 40, 8, 17408, 151936,
+                  {"qk_norm": True}),
+    "seamless-m4t-medium": ("audio", 12, 1024, 16, 16, 4096, 256206,
+                            {"encoder_layers": 12, "frontend": "audio"}),
+    "granite-moe-1b-a400m": ("moe", 24, 1024, 16, 8, 512, 49155,
+                             {"num_experts": 32, "experts_per_token": 8}),
+    "kimi-k2-1t-a32b": ("moe", 61, 7168, 64, 8, 2048, 163840,
+                        {"num_experts": 384, "experts_per_token": 8}),
+    "zamba2-2.7b": ("hybrid", 54, 2560, 32, 32, 10240, 32000,
+                    {"ssm_state": 64}),
+    "internvl2-26b": ("vlm", 48, 6144, 48, 8, 16384, 92553,
+                      {"frontend": "vision"}),
+    "minitron-4b": ("dense", 32, 3072, 24, 8, 9216, 256000, {}),
+    "h2o-danube-3-4b": ("dense", 24, 3840, 32, 8, 10240, 32000,
+                        {"sliding_window": 4096}),
+}
+
+
+def test_all_ten_assigned():
+    assert set(ARCHITECTURES) == set(ASSIGNMENT)
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNMENT))
+def test_config_matches_assignment(arch):
+    family, L, d, H, kv, ff, vocab, extras = ASSIGNMENT[arch]
+    cfg = get_config(arch)
+    assert cfg.family == family
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == vocab
+    if H:
+        assert cfg.num_heads == H
+        assert cfg.num_kv_heads == kv
+    for key, val in extras.items():
+        assert getattr(cfg, key) == val, (arch, key)
+    assert cfg.source   # citation present
+
+
+def test_shapes_match_assignment():
+    s = get_shape("train_4k")
+    assert (s.seq_len, s.global_batch, s.kind) == (4096, 256, "train")
+    s = get_shape("prefill_32k")
+    assert (s.seq_len, s.global_batch, s.kind) == (32768, 32, "prefill")
+    s = get_shape("decode_32k")
+    assert (s.seq_len, s.global_batch, s.kind) == (32768, 128, "decode")
+    s = get_shape("long_500k")
+    assert (s.seq_len, s.global_batch, s.kind) == (524288, 1, "decode")
+
+
+def test_long_context_policy():
+    # native sub-quadratic: ssm/hybrid/native-SWA
+    for arch in ["rwkv6-7b", "zamba2-2.7b", "h2o-danube-3-4b"]:
+        assert supports_long_context(get_config(arch))
+        assert long_context_variant(get_config(arch)).name == \
+            get_config(arch).name
+    # full-attention archs get the explicit SWA variant
+    for arch in ["qwen2-72b", "qwen3-14b", "minitron-4b", "internvl2-26b",
+                 "granite-moe-1b-a400m", "kimi-k2-1t-a32b",
+                 "seamless-m4t-medium"]:
+        cfg = get_config(arch)
+        assert not supports_long_context(cfg)
+        var = long_context_variant(cfg)
+        assert var.sliding_window == 4096
+        assert "+swa4k" in var.name
+
+
+def test_param_counts_sane():
+    # order-of-magnitude sanity of the analytic counts used by the roofline
+    approx = {
+        "qwen2-72b": 72e9, "qwen3-14b": 14e9, "minitron-4b": 4e9,
+        "h2o-danube-3-4b": 4e9, "rwkv6-7b": 7e9, "zamba2-2.7b": 2.7e9,
+        "granite-moe-1b-a400m": 1.3e9, "kimi-k2-1t-a32b": 1.0e12,
+        "internvl2-26b": 20e9, "seamless-m4t-medium": 1.2e9,
+    }
+    for arch, expect in approx.items():
+        n = get_config(arch).param_count()
+        assert 0.4 * expect < n < 2.5 * expect, (arch, n, expect)
+
+
+def test_moe_active_params():
+    cfg = get_config("kimi-k2-1t-a32b")
+    active = cfg.active_param_count()
+    assert active < 0.1 * cfg.param_count()      # sparse activation
+    assert 10e9 < active < 60e9                  # "A32B"-ish

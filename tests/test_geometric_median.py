@@ -1,0 +1,139 @@
+"""Property tests for the geometric median (paper §2.1, Lemma 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import geometric_median, geometric_median_pytree, \
+    trim_weights, batch_mean_norms
+from repro.core.theory import c_alpha
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _points(draw, n_min=2, n_max=12, d_min=1, d_max=6):
+    n = draw(st.integers(n_min, n_max))
+    d = draw(st.integers(d_min, d_max))
+    data = draw(st.lists(
+        st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                 min_size=d, max_size=d),
+        min_size=n, max_size=n))
+    return np.array(data, np.float32)
+
+
+points_strategy = st.builds(lambda seed, n, d: np.random.default_rng(seed)
+                            .normal(size=(n, d)).astype(np.float32) * 10,
+                            st.integers(0, 2**31 - 1),
+                            st.integers(2, 12), st.integers(1, 6))
+
+
+@given(points_strategy)
+def test_objective_not_worse_than_mean(pts):
+    """geomed minimizes sum of distances => objective <= mean's objective."""
+    gm = geometric_median(jnp.asarray(pts), max_iters=128, tol=1e-10)
+    mean = pts.mean(axis=0)
+
+    def obj(y):
+        return float(np.sum(np.linalg.norm(pts - y, axis=1)))
+
+    assert obj(np.asarray(gm)) <= obj(mean) + 1e-3 * (1 + abs(obj(mean)))
+
+
+@given(points_strategy,
+       st.lists(st.floats(-50, 50, allow_nan=False, width=32),
+                min_size=6, max_size=6))
+def test_translation_equivariance(pts, shift):
+    shift = np.array(shift[:pts.shape[1]], np.float32)
+    g1 = np.asarray(geometric_median(jnp.asarray(pts), max_iters=96))
+    g2 = np.asarray(geometric_median(jnp.asarray(pts + shift), max_iters=96))
+    np.testing.assert_allclose(g1 + shift, g2, atol=2e-2)
+
+
+@given(points_strategy, st.integers(0, 2**31 - 1))
+def test_permutation_invariance(pts, seed):
+    perm = np.random.default_rng(seed).permutation(pts.shape[0])
+    g1 = np.asarray(geometric_median(jnp.asarray(pts)))
+    g2 = np.asarray(geometric_median(jnp.asarray(pts[perm])))
+    np.testing.assert_allclose(g1, g2, atol=1e-3)
+
+
+@given(points_strategy)
+def test_within_bounding_box(pts):
+    """geomed lies in the convex hull => inside the bounding box."""
+    g = np.asarray(geometric_median(jnp.asarray(pts), max_iters=128))
+    lo, hi = pts.min(axis=0), pts.max(axis=0)
+    assert np.all(g >= lo - 1e-2) and np.all(g <= hi + 1e-2)
+
+
+def test_single_point_and_mean_reduction():
+    pts = jnp.array([[3.0, -2.0, 5.0]])
+    np.testing.assert_allclose(np.asarray(geometric_median(pts)),
+                               [3.0, -2.0, 5.0], atol=1e-6)
+
+
+def test_lemma1_robustness():
+    """Lemma 1 (gamma=0): if > (1-alpha) n points lie in B(0, r), then
+    ||geomed|| <= C_alpha r."""
+    rng = np.random.default_rng(0)
+    n, d, alpha, r = 20, 8, 0.25, 1.0
+    n_in = int((1 - alpha) * n) + 1
+    inliers = rng.normal(size=(n_in, d))
+    inliers = inliers / np.linalg.norm(inliers, axis=1, keepdims=True) \
+        * rng.uniform(0, r, (n_in, 1))
+    outliers = rng.normal(size=(n - n_in, d)) * 1e4
+    pts = jnp.asarray(np.vstack([inliers, outliers]), jnp.float32)
+    g = geometric_median(pts, max_iters=256, tol=1e-10)
+    assert float(jnp.linalg.norm(g)) <= c_alpha(alpha) * r + 1e-3
+
+
+def test_median_1d_matches_numpy_median_interval():
+    """In 1-D the geometric median is a median."""
+    pts = jnp.array([[1.0], [2.0], [3.0], [10.0], [11.0]])
+    g = float(geometric_median(pts, max_iters=512, tol=1e-12)[0])
+    assert 2.9 <= g <= 3.1
+
+
+def test_pytree_matches_flat():
+    rng = np.random.default_rng(1)
+    pts = rng.normal(size=(7, 10)).astype(np.float32)
+    flat = geometric_median(jnp.asarray(pts), max_iters=128)
+    tree = {"a": jnp.asarray(pts[:, :4]),
+            "b": {"c": jnp.asarray(pts[:, 4:])}}
+    gt = geometric_median_pytree(tree, max_iters=128)
+    merged = np.concatenate([np.asarray(gt["a"]),
+                             np.asarray(gt["b"]["c"])])
+    np.testing.assert_allclose(np.asarray(flat), merged, atol=1e-4)
+
+
+def test_weights_zero_excludes_points():
+    pts = jnp.array([[0.0, 0.0], [0.1, 0.0], [-0.1, 0.0], [1e6, 1e6]])
+    w = jnp.array([1.0, 1.0, 1.0, 0.0])
+    g = geometric_median(pts, weights=w, max_iters=256)
+    assert float(jnp.linalg.norm(g)) < 0.2
+
+
+def test_trim_weights():
+    norms = jnp.array([1.0, 1.1, 0.9, 1.05, 500.0])
+    w = trim_weights(norms, multiplier=3.0)
+    np.testing.assert_array_equal(np.asarray(w), [1, 1, 1, 1, 0])
+    # never all-zero
+    w2 = trim_weights(jnp.array([1e9, 1e9]), multiplier=0.0)
+    assert float(jnp.sum(w2)) > 0
+
+
+def test_batch_mean_norms():
+    tree = {"a": jnp.array([[3.0, 0.0], [0.0, 0.0]]),
+            "b": jnp.array([[4.0], [0.0]])}
+    norms = batch_mean_norms(tree)
+    np.testing.assert_allclose(np.asarray(norms), [5.0, 0.0], atol=1e-6)
+
+
+def test_jit_and_grad_safe():
+    pts = jnp.asarray(np.random.default_rng(2).normal(size=(6, 4)),
+                      jnp.float32)
+    g = jax.jit(lambda p: geometric_median(p))(pts)
+    assert g.shape == (4,)
+    assert bool(jnp.all(jnp.isfinite(g)))

@@ -1,0 +1,121 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracles
+(shape/dtype sweeps + hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import geometric_median
+from repro.kernels.attention import flash, ref as attn_ref
+from repro.kernels.geomed import geomed, ops as geomed_ops, \
+    ref as geomed_ref
+
+settings.register_profile("kernels", max_examples=10, deadline=None)
+settings.load_profile("kernels")
+
+
+# ---------------------------------------------------------------------------
+# geomed kernel
+
+@pytest.mark.parametrize("k,d", [(2, 64), (8, 1000), (16, 4096), (64, 512),
+                                 (5, 777)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_geomed_sqdist_sweep(k, d, dtype):
+    key = jax.random.PRNGKey(k * d)
+    Z = jax.random.normal(key, (k, d), dtype)
+    y = jax.random.normal(jax.random.fold_in(key, 1), (d,), dtype)
+    out = geomed.sqdist(Z, y, interpret=True)
+    expected = geomed_ref.weiszfeld_distances_ref(Z, y)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("k,d", [(4, 512), (8, 1000), (32, 2048)])
+def test_geomed_step_sweep(k, d):
+    key = jax.random.PRNGKey(d)
+    Z = jax.random.normal(key, (k, d), jnp.float32)
+    y = jax.random.normal(jax.random.fold_in(key, 1), (d,), jnp.float32)
+    w = jax.random.uniform(jax.random.fold_in(key, 2), (k,)) + 0.1
+    out = geomed.weiszfeld_step(Z, y, w, interpret=True)
+    expected = geomed_ref.weiszfeld_step_ref(Z, y, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(2, 12), st.integers(1, 200), st.integers(0, 2**31 - 1))
+def test_geomed_full_vs_core(k, d, seed):
+    Z = jnp.asarray(
+        np.random.default_rng(seed).normal(size=(k, d)).astype(np.float32))
+    kernel = geomed_ops.geometric_median_kernel(Z, interpret=True,
+                                                max_iters=64)
+    core = geometric_median(Z, max_iters=64)
+    np.testing.assert_allclose(np.asarray(kernel), np.asarray(core),
+                               atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+
+ATTN_CASES = [
+    # (B, Tq, Tk, H, KV, hd, causal, window)
+    (2, 64, 64, 4, 2, 32, True, None),
+    (1, 128, 128, 8, 8, 64, True, None),
+    (2, 100, 100, 4, 1, 32, True, None),        # unaligned T
+    (1, 256, 256, 4, 2, 64, True, 64),          # sliding window
+    (2, 64, 64, 4, 4, 32, False, None),         # bidirectional
+    (1, 96, 96, 6, 2, 16, True, 32),            # window + GQA + odd heads
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(case, dtype):
+    B, Tq, Tk, H, KV, hd, causal, window = case
+    key = jax.random.PRNGKey(hash(case) % (2**31))
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Tq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Tk, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Tk, KV, hd), dtype)
+    out = flash.flash_attention(q, k, v, causal=causal,
+                                sliding_window=window,
+                                block_q=32, block_kv=32, interpret=True)
+    expected = attn_ref.flash_attention_ref(q, k, v, causal=causal,
+                                            sliding_window=window)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@given(st.integers(1, 2), st.sampled_from([16, 48, 64]),
+       st.sampled_from([(4, 2), (4, 4), (2, 1)]),
+       st.booleans(), st.integers(0, 2**31 - 1))
+def test_flash_attention_property(B, T, heads, causal, seed):
+    H, KV = heads
+    hd = 16
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, T, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, T, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, T, KV, hd)).astype(np.float32))
+    out = flash.flash_attention(q, k, v, causal=causal, block_q=16,
+                                block_kv=16, interpret=True)
+    expected = attn_ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_flash_attention_rows_are_convex_combos():
+    """Each output row is a convex combination of v rows => bounded by
+    [min(v), max(v)] per feature."""
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 32, 2, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 32, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 32, 2, 16))
+    out = flash.flash_attention(q, k, v, causal=False, block_q=16,
+                                block_kv=16, interpret=True)
+    lo = jnp.min(v) - 1e-4
+    hi = jnp.max(v) + 1e-4
+    assert float(jnp.min(out)) >= float(lo)
+    assert float(jnp.max(out)) <= float(hi)

@@ -1,0 +1,160 @@
+"""Robust training: worker-mode vs group-mode equivalence + the paper's
+linear-regression convergence claims at test scale."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import (RobustConfig, aggregate, make_robust_train_step,
+                        per_worker_grads, theory)
+from repro.core.aggregators import batch_means, gmom_aggregator
+from repro.data import regression
+from repro.launch import steps as steps_lib
+
+
+def test_worker_vs_group_mode_honest_equality():
+    """mean-of-worker-means == pooled group mean (the group-mode invariant
+    that lets the production path avoid (m, P) gradient memory)."""
+    key = jax.random.PRNGKey(0)
+    d, N, m, k = 6, 240, 12, 4
+    ds = regression.generate(key, dim=d, total_samples=N, num_workers=m)
+    theta = jnp.zeros((d,))
+
+    # worker mode: m per-worker grads -> k batch means
+    stacked, _ = per_worker_grads(regression.squared_loss, theta,
+                                  regression.worker_batches(ds))
+    worker_means = batch_means(stacked, k)
+
+    # group mode: k pooled gradients directly
+    feats = ds.features.reshape(k, (m // k) * ds.samples_per_worker, d)
+    targs = ds.targets.reshape(k, (m // k) * ds.samples_per_worker)
+
+    def group_grad(b):
+        return jax.grad(regression.squared_loss)(theta, b)
+
+    group_grads = jax.vmap(group_grad)((feats, targs))
+    np.testing.assert_allclose(np.asarray(worker_means),
+                               np.asarray(group_grads), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("attack,aggregator,should_converge", [
+    ("none", "mean", True),
+    ("sign_flip", "mean", False),
+    ("sign_flip", "gmom", True),
+    ("inner_product", "gmom", True),
+    ("random_noise", "gmom", True),
+    ("mean_shift", "gmom", True),
+])
+def test_linreg_convergence(attack, aggregator, should_converge):
+    """Corollary 1: exponential convergence to O(sqrt(dk/N)) under
+    2(1+eps)q <= k; Algorithm 1 (mean) fails under a single Byzantine."""
+    key = jax.random.PRNGKey(1)
+    d, N, m, q = 20, 4000, 20, 3
+    ds = regression.generate(key, dim=d, total_samples=N, num_workers=m)
+    rc = RobustConfig(num_workers=m, num_byzantine=q, num_batches=10,
+                      attack=attack, aggregator=aggregator)
+    opt = optim.sgd(theory.LINEAR_REGRESSION.step_size)   # eta = 1/2
+    step = jax.jit(make_robust_train_step(regression.squared_loss, opt, rc))
+    theta = jnp.zeros((d,))
+    opt_state = opt.init(theta)
+    batches = regression.worker_batches(ds)
+    for t in range(40):
+        theta, opt_state, _ = step(theta, opt_state, batches,
+                                   jax.random.PRNGKey(2), t)
+    err = float(jnp.linalg.norm(theta - ds.theta_star))
+    floor = theory.error_floor(d, N, 10, c2=20.0)
+    if should_converge:
+        assert err < floor, f"err={err} floor={floor}"
+    else:
+        assert err > 1.0, f"mean unexpectedly robust: err={err}"
+
+
+def test_contraction_rate_matches_theory():
+    """Failure-free GD on the population-like regime contracts at least as
+    fast as Theorem 1's rate (1/2 + sqrt(3)/4 for linreg)."""
+    key = jax.random.PRNGKey(2)
+    d, N, m = 10, 100_000, 10     # huge N => near-population gradients
+    ds = regression.generate(key, dim=d, total_samples=N, num_workers=m)
+    rc = RobustConfig(num_workers=m, num_byzantine=0, num_batches=1,
+                      aggregator="mean", attack="none")
+    opt = optim.sgd(0.5)
+    step = jax.jit(make_robust_train_step(regression.squared_loss, opt, rc))
+    theta = jnp.zeros((d,))
+    opt_state = opt.init(theta)
+    errs = []
+    batches = regression.worker_batches(ds)
+    for t in range(10):
+        errs.append(float(jnp.linalg.norm(theta - ds.theta_star)))
+        theta, opt_state, _ = step(theta, opt_state, batches,
+                                   jax.random.PRNGKey(0), t)
+    rate = theory.LINEAR_REGRESSION.theorem1_contraction   # ≈ 0.933
+    # empirical per-step contraction (while far from the floor)
+    emp = errs[5] / errs[4]
+    assert emp <= rate + 0.02, f"contraction {emp} vs theory {rate}"
+
+
+def test_rotating_byzantine_sets():
+    """The paper's hardest case: B_t changes every round."""
+    key = jax.random.PRNGKey(3)
+    d, N, m, q = 10, 2000, 20, 3
+    ds = regression.generate(key, dim=d, total_samples=N, num_workers=m)
+    rc = RobustConfig(num_workers=m, num_byzantine=q, num_batches=10,
+                      attack="sign_flip", aggregator="gmom",
+                      rotate_byzantine=True)
+    opt = optim.sgd(0.5)
+    step = jax.jit(make_robust_train_step(regression.squared_loss, opt, rc))
+    theta = jnp.zeros((d,))
+    opt_state = opt.init(theta)
+    batches = regression.worker_batches(ds)
+    for t in range(40):
+        theta, opt_state, _ = step(theta, opt_state, batches,
+                                   jax.random.PRNGKey(4), t)
+    err = float(jnp.linalg.norm(theta - ds.theta_star))
+    assert err < 1.0
+
+
+def test_tolerance_condition_helpers():
+    assert theory.tolerance_ok(20, 10, 4)          # 2.2*4 = 8.8 <= 10
+    assert not theory.tolerance_ok(20, 8, 4)       # 8.8 > 8
+    from repro.core.grouping import choose_num_batches
+    assert choose_num_batches(20, 0) == 1
+    k = choose_num_batches(20, 4)
+    assert k >= 2 * 1.1 * 4 and 20 % k == 0
+
+
+def test_group_mode_train_step_runs():
+    """The production (group-mode) step on the linreg problem."""
+    from repro.configs.base import InputShape
+    key = jax.random.PRNGKey(5)
+    d, N, k = 8, 1600, 4
+    ds = regression.generate(key, dim=d, total_samples=N, num_workers=k)
+    rc = RobustConfig(num_workers=k, num_byzantine=1, num_batches=k,
+                      attack="sign_flip", aggregator="gmom")
+    opt = optim.sgd(0.5)
+
+    import repro.models.model  # noqa: F401 (steps imports model lazily)
+    # group-mode step over a toy "model" = the regression loss
+    from repro.core.byzantine import get_attack, sample_byzantine_mask
+    from repro.core.geometric_median import geometric_median_pytree
+
+    def train_step(theta, opt_state, batch, key, t):
+        def gloss(th, b):
+            return regression.squared_loss(th, b)
+        losses, grads = jax.vmap(
+            lambda b: jax.value_and_grad(gloss)(theta, b))(batch)
+        mask = sample_byzantine_mask(key, k, 1, rotate=True, round_index=t)
+        reported = get_attack("sign_flip")(grads, mask, key)
+        agg = geometric_median_pytree(reported)
+        updates, opt_state = opt.update(agg, opt_state, theta)
+        return theta + updates, opt_state, jnp.mean(losses)
+
+    theta = jnp.zeros((d,))
+    opt_state = opt.init(theta)
+    batch = regression.worker_batches(ds)
+    step = jax.jit(train_step)
+    for t in range(30):
+        theta, opt_state, _ = step(theta, opt_state, batch,
+                                   jax.random.PRNGKey(6), t)
+    assert float(jnp.linalg.norm(theta - ds.theta_star)) < 1.0
