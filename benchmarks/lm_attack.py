@@ -13,7 +13,7 @@ import jax
 from benchmarks.common import save_json
 from repro import optim
 from repro.configs import get_config
-from repro.core import RobustConfig, make_robust_train_step
+from repro.core import RobustConfig, byzantine, make_run_rounds
 from repro.data.tokens import TokenStream
 from repro.models import model as M
 
@@ -22,7 +22,7 @@ STEPS = 10
 M_WORKERS = 8
 
 
-def run(arch, aggregator, attack):
+def run(arch, aggregator, attack, schedule="rotating"):
     cfg = get_config(arch).reduced()
     if cfg.family == "hybrid":
         cfg = cfg.with_(ssm_chunk=8)
@@ -32,28 +32,34 @@ def run(arch, aggregator, attack):
                       aggregator=aggregator, num_batches=8)
     opt = optim.adamw(1e-3)
     loss_fn = lambda p, b: M.loss_fn(p, b, cfg)  # noqa: E731
-    step = jax.jit(make_robust_train_step(loss_fn, opt, rc))
+    sched = byzantine.make_schedule(schedule, num_workers=M_WORKERS,
+                                    num_byzantine=2, attack=attack)
+    # all STEPS rounds fuse into one lax.scan dispatch
+    runner = make_run_rounds(loss_fn, opt, rc, schedule=sched)
     params = M.init(jax.random.PRNGKey(0), cfg)
     opt_state = opt.init(params)
-    losses = []
-    for i in range(STEPS):
-        params, opt_state, metrics = step(
-            params, opt_state, stream.batch(i), jax.random.PRNGKey(9), i)
-        losses.append(float(metrics["loss_median"]))
-    return losses
+    batch = jax.tree.map(lambda *xs: jax.numpy.stack(xs),
+                         *[stream.batch(i) for i in range(STEPS)])
+    _, _, _, metrics = runner(params, opt_state, batch, jax.random.PRNGKey(9),
+                              per_round_batches=True)
+    return [float(v) for v in metrics["loss_median"]]
 
 
 def main() -> list[dict]:
     rows = []
     for arch in ARCHS:
-        for aggregator, attack in [("mean", "none"), ("mean", "sign_flip"),
-                                   ("gmom", "sign_flip"),
-                                   ("gmom", "inner_product")]:
-            losses = run(arch, aggregator, attack)
+        for aggregator, attack, schedule in [
+                ("mean", "none", "static"), ("mean", "sign_flip", "rotating"),
+                ("gmom", "sign_flip", "rotating"),
+                ("gmom", "inner_product", "rotating"),
+                ("gmom", "alie", "rotating"),
+                ("gmom", "norm_stealth", "stealth_then_strike")]:
+            losses = run(arch, aggregator, attack, schedule)
             rows.append({"arch": arch, "aggregator": aggregator,
-                         "attack": attack, "first": losses[0],
-                         "final": losses[-1], "losses": losses})
-            print(f"lm_attack,{arch},{aggregator},{attack},"
+                         "attack": attack, "schedule": schedule,
+                         "first": losses[0], "final": losses[-1],
+                         "losses": losses})
+            print(f"lm_attack,{arch},{aggregator},{attack},{schedule},"
                   f"{losses[0]:.3f}->{losses[-1]:.3f}")
     save_json("lm_attack.json", rows)
     return rows

@@ -20,7 +20,10 @@ from repro.core import aggregators, byzantine, grouping, theory  # noqa: F401
 from repro.core.robust_train import (  # noqa: F401
     RobustConfig,
     aggregate,
+    aggregate_reported,
     make_robust_train_step,
+    make_run_rounds,
     make_shardmap_aggregate,
     per_worker_grads,
+    schedule_from_config,
 )

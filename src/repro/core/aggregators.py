@@ -71,6 +71,18 @@ def _num_workers(stacked) -> int:
     return jax.tree.leaves(stacked)[0].shape[0]
 
 
+def bottom_k_mask(scores: jax.Array, k: int) -> jax.Array:
+    """{0,1} float mask selecting exactly the k smallest-score entries.
+
+    ``scores <= kth-smallest`` over-selects when values tie (e.g. colluding
+    byzantine workers reporting identical gradients, or unlucky uniform
+    draws); ranking via stable argsort breaks ties by index so exactly k
+    entries are ever selected.
+    """
+    rank = jnp.argsort(jnp.argsort(scores))
+    return (rank < k).astype(jnp.float32)
+
+
 def _apply_grouping(stacked, grouping: Grouping):
     """Permute + reshape worker axis m -> (k, b) and mean over b."""
     perm = jnp.asarray(grouping.perm)
@@ -201,13 +213,11 @@ def random_select_aggregator(stacked_grads, *, key=None,
     if key is None:
         key = jax.random.PRNGKey(0)
     scores = jax.random.uniform(key, (m,))
-    thresh = jnp.sort(scores)[n_sel - 1]
-    sel = (scores <= thresh).astype(jnp.float32)
-    denom = jnp.maximum(jnp.sum(sel), 1.0)
+    sel = bottom_k_mask(scores, n_sel)     # exactly n_sel, even under ties
 
     def leaf(g):
         s = sel.astype(g.dtype).reshape((-1,) + (1,) * (g.ndim - 1))
-        return jnp.sum(g * s, axis=0) / denom.astype(g.dtype)
+        return jnp.sum(g * s, axis=0) / jnp.asarray(n_sel, g.dtype)
 
     return jax.tree.map(leaf, stacked_grads)
 
@@ -220,13 +230,13 @@ def norm_select_aggregator(stacked_grads, *, num_byzantine: int = 0, **_kw):
     m = _num_workers(stacked_grads)
     keep = max(m - max(num_byzantine, 1), 1)
     norms = batch_mean_norms(stacked_grads)            # (m,)
-    thresh = jnp.sort(norms)[keep - 1]
-    sel = (norms <= thresh).astype(jnp.float32)
-    denom = jnp.maximum(jnp.sum(sel), 1.0)
+    # colluders reporting identical gradients tie in norm — rank-select so
+    # exactly ``keep`` gradients are ever averaged.
+    sel = bottom_k_mask(norms, keep)
 
     def leaf(g):
         s = sel.astype(g.dtype).reshape((-1,) + (1,) * (g.ndim - 1))
-        return jnp.sum(g * s, axis=0) / denom.astype(g.dtype)
+        return jnp.sum(g * s, axis=0) / jnp.asarray(keep, g.dtype)
 
     return jax.tree.map(leaf, stacked_grads)
 

@@ -14,12 +14,17 @@ where ``byz_mask`` is True (enforced by construction via jnp.where).
 Attack selection of B_t per round is handled by ``sample_byzantine_mask``:
 either a fixed set, or an adversarially rotating set (different workers each
 round — the paper's hardest case for schemes that try to identify culprits).
+
+Multi-round adversaries are ``AttackSchedule``s: the Byzantine set AND the
+attack are pure functions of the round index plus a small carried attack
+state, so a whole campaign ("stay quiet until the model nearly converges,
+then strike") rolls into one ``lax.scan`` (see robust_train.make_run_rounds).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -67,7 +72,7 @@ def _where_byz(mask, malicious, honest):
         malicious, honest)
 
 
-def sample_byzantine_mask(key, num_workers: int, num_byzantine: int, *,
+def sample_byzantine_mask(key, num_workers: int, num_byzantine, *,
                           rotate: bool = True, round_index=0) -> jax.Array:
     """(m,) bool mask with exactly q True entries.
 
@@ -75,15 +80,21 @@ def sample_byzantine_mask(key, num_workers: int, num_byzantine: int, *,
     the round index into the key) — modeling B_t changing across iterations.
     ``rotate=False`` fixes the first q workers (worst case for contiguous
     grouping: the q faults hit q distinct batches).
+
+    ``num_byzantine`` may be a traced integer (ramp-up schedules vary q
+    across scanned rounds); the rank comparison handles that and ties alike.
     """
-    if num_byzantine == 0:
-        return jnp.zeros((num_workers,), bool)
-    if not rotate:
+    if isinstance(num_byzantine, int):
+        if num_byzantine == 0:
+            return jnp.zeros((num_workers,), bool)
+        if not rotate:
+            return jnp.arange(num_workers) < num_byzantine
+    elif not rotate:
         return jnp.arange(num_workers) < num_byzantine
+    from repro.core.aggregators import bottom_k_mask
     key = jax.random.fold_in(key, round_index)
     scores = jax.random.uniform(key, (num_workers,))
-    thresh = jnp.sort(scores)[num_byzantine - 1]
-    return scores <= thresh
+    return bottom_k_mask(scores, num_byzantine).astype(bool)
 
 
 # ---------------------------------------------------------------------------
@@ -197,3 +208,228 @@ def label_flip_attack(stacked_grads, byz_mask, key, **_kw):
     del key
     malicious = jax.tree.map(lambda g: -g, stacked_grads)
     return _where_byz(byz_mask, malicious, stacked_grads)
+
+
+@register("alie",
+          "A Little Is Enough [Baruch et al. '19]: all byzantine report "
+          "mean - z·std of the honest gradients, with z calibrated from "
+          "(m, q) so the point still looks like a plausible honest draw — "
+          "small perturbation, accumulates bias across rounds")
+def alie_attack(stacked_grads, byz_mask, key, *, z_max: float | None = None,
+                min_z: float = 0.5, **_kw):
+    del key
+    m = jax.tree.leaves(stacked_grads)[0].shape[0]
+    honest_w = jnp.logical_not(byz_mask).astype(jnp.float32)     # (m,)
+    n_h = jnp.maximum(jnp.sum(honest_w), 1.0)
+    if z_max is None:
+        # z s.t. Phi(z) = (m - q - s)/(m - q) with s = floor(m/2 + 1) - q:
+        # the crafted point ranks inside the majority of honest draws.
+        # Small q makes that calibration degenerate (phi -> 1/2 => z -> 0,
+        # i.e. reporting the honest mean); floor at min_z so the attack
+        # always injects a nonzero within-spread bias.
+        q = jnp.sum(byz_mask.astype(jnp.float32))
+        s = jnp.floor(m / 2.0 + 1.0) - q
+        phi = (m - q - s) / jnp.maximum(m - q, 1.0)
+        z = jax.scipy.special.ndtri(jnp.clip(phi, 0.5, 1.0 - 1e-6))
+        z = jnp.maximum(z, min_z)
+    else:
+        z = jnp.asarray(z_max, jnp.float32)
+
+    def mal(g):
+        gf = g.astype(jnp.float32)
+        w = _mask_like(honest_w, gf)
+        mu = jnp.sum(gf * w, axis=0, keepdims=True) / n_h
+        var = jnp.sum(jnp.square(gf - mu) * w, axis=0, keepdims=True) / n_h
+        point = mu - z * jnp.sqrt(var)
+        return jnp.broadcast_to(point, g.shape).astype(g.dtype)
+
+    return _where_byz(byz_mask, jax.tree.map(mal, stacked_grads),
+                      stacked_grads)
+
+
+@register("norm_stealth",
+          "adaptive omniscient: report the *negated* honest-mean direction "
+          "rescaled to sit just under the server's norm-trim threshold "
+          "(multiplier × median worker norm) so trimming never fires")
+def norm_stealth_attack(stacked_grads, byz_mask, key, *,
+                        trim_multiplier: float = 3.0, safety: float = 0.9,
+                        **_kw):
+    del key
+    from repro.core.geometric_median import batch_mean_norms
+    norms = batch_mean_norms(stacked_grads)          # (m,) — honest pre-attack
+    tau = safety * trim_multiplier * jnp.median(norms)
+    leaves, treedef = jax.tree.flatten(stacked_grads)
+    mu = [jnp.mean(l.astype(jnp.float32), axis=0, keepdims=True)
+          for l in leaves]
+    mu_norm = jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in mu))
+    scale = tau / jnp.maximum(mu_norm, 1e-12)
+    malicious = jax.tree.unflatten(treedef, [
+        jnp.broadcast_to(-scale * x, l.shape).astype(l.dtype)
+        for x, l in zip(mu, leaves)])
+    return _where_byz(byz_mask, malicious, stacked_grads)
+
+
+# ---------------------------------------------------------------------------
+# attack schedules: multi-round adversaries as pure functions of the round
+
+@dataclasses.dataclass(frozen=True)
+class AttackSchedule:
+    """A multi-round adversary campaign.
+
+    ``apply(stacked_honest_grads, key, round_index, state) ->
+    (reported_grads, byz_mask, new_state)`` must be jit/scan-friendly:
+    ``round_index`` is traced inside ``lax.scan`` and ``state`` (from
+    ``init_state()``) is the carried attack memory (fixed pytree structure).
+    """
+    name: str
+    num_workers: int
+    num_byzantine: int
+    init_state: Callable[[], Any]
+    apply: Callable[..., tuple]
+
+
+_SCHEDULE_REGISTRY: dict[str, Callable[..., AttackSchedule]] = {}
+
+
+def register_schedule(name: str):
+    def deco(builder):
+        _SCHEDULE_REGISTRY[name] = builder
+        return builder
+    return deco
+
+
+def make_schedule(name: str, *, num_workers: int, num_byzantine: int,
+                  attack: str = "sign_flip", attack_kwargs=(),
+                  **kwargs) -> AttackSchedule:
+    if name not in _SCHEDULE_REGISTRY:
+        raise KeyError(
+            f"unknown schedule {name!r}; have {sorted(_SCHEDULE_REGISTRY)}")
+    return _SCHEDULE_REGISTRY[name](
+        num_workers=num_workers, num_byzantine=num_byzantine, attack=attack,
+        attack_kwargs=tuple(attack_kwargs), **kwargs)
+
+
+def available_schedules() -> list[str]:
+    return sorted(_SCHEDULE_REGISTRY)
+
+
+def _stateless(): return ()
+
+
+@register_schedule("static")
+def static_schedule(*, num_workers, num_byzantine, attack="sign_flip",
+                    attack_kwargs=(), **_kw) -> AttackSchedule:
+    """Fixed Byzantine set (first q workers), same attack every round."""
+    atk, kw = get_attack(attack), dict(attack_kwargs)
+
+    def apply(stacked, key, round_index, state):
+        del round_index
+        mask = sample_byzantine_mask(key, num_workers, num_byzantine,
+                                     rotate=False)
+        return atk(stacked, mask, key, **kw), mask, state
+
+    return AttackSchedule("static", num_workers, num_byzantine,
+                          _stateless, apply)
+
+
+@register_schedule("rotating")
+def rotating_schedule(*, num_workers, num_byzantine, attack="sign_flip",
+                      attack_kwargs=(), **_kw) -> AttackSchedule:
+    """Fresh uniformly-random q-subset every round (B_t changes per round —
+    the paper's hardest case for culprit-identification defenses)."""
+    atk, kw = get_attack(attack), dict(attack_kwargs)
+
+    def apply(stacked, key, round_index, state):
+        mask = sample_byzantine_mask(key, num_workers, num_byzantine,
+                                     rotate=True, round_index=round_index)
+        return atk(stacked, mask, key, **kw), mask, state
+
+    return AttackSchedule("rotating", num_workers, num_byzantine,
+                          _stateless, apply)
+
+
+@register_schedule("ramp_up")
+def ramp_up_schedule(*, num_workers, num_byzantine, attack="sign_flip",
+                     attack_kwargs=(), ramp_rounds: int = 20,
+                     **_kw) -> AttackSchedule:
+    """Corruption grows from 0 to q over ``ramp_rounds`` rounds (a slowly
+    spreading compromise), rotating which workers are faulty."""
+    atk, kw = get_attack(attack), dict(attack_kwargs)
+
+    def apply(stacked, key, round_index, state):
+        frac = jnp.minimum((round_index + 1.0) / ramp_rounds, 1.0)
+        q_t = jnp.ceil(frac * num_byzantine).astype(jnp.int32)
+        mask = sample_byzantine_mask(key, num_workers, q_t,
+                                     rotate=True, round_index=round_index)
+        return atk(stacked, mask, key, **kw), mask, state
+
+    return AttackSchedule("ramp_up", num_workers, num_byzantine,
+                          _stateless, apply)
+
+
+@register_schedule("coordinated_switch")
+def coordinated_switch_schedule(*, num_workers, num_byzantine,
+                                attack="sign_flip",
+                                attack_b="inner_product",
+                                attack_kwargs=(), attack_b_kwargs=(),
+                                switch_round: int = 10, rotate: bool = True,
+                                **_kw) -> AttackSchedule:
+    """All colluders run ``attack`` until ``switch_round`` then switch to
+    ``attack_b`` in lockstep — probes defenses tuned to one attack family."""
+    atk_a, kw_a = get_attack(attack), dict(attack_kwargs)
+    atk_b, kw_b = get_attack(attack_b), dict(attack_b_kwargs)
+
+    def apply(stacked, key, round_index, state):
+        mask = sample_byzantine_mask(key, num_workers, num_byzantine,
+                                     rotate=rotate, round_index=round_index)
+        reported = jax.lax.cond(
+            round_index < switch_round,
+            lambda s: atk_a(s, mask, key, **kw_a),
+            lambda s: atk_b(s, mask, key, **kw_b),
+            stacked)
+        return reported, mask, state
+
+    return AttackSchedule("coordinated_switch", num_workers, num_byzantine,
+                          _stateless, apply)
+
+
+@register_schedule("stealth_then_strike")
+def stealth_then_strike_schedule(*, num_workers, num_byzantine,
+                                 attack="sign_flip", attack_kwargs=(),
+                                 strike_fraction: float = 0.25,
+                                 ema_decay: float = 0.8,
+                                 **_kw) -> AttackSchedule:
+    """Adaptive omniscient campaign: the colluders report honestly while
+    tracking an EMA of the honest-mean gradient norm; once it decays below
+    ``strike_fraction`` × its initial value (the model is near the optimum,
+    where damage is most visible) they latch into attacking every round."""
+    atk, kw = get_attack(attack), dict(attack_kwargs)
+
+    def init_state():
+        return {"init_norm": jnp.array(-1.0, jnp.float32),
+                "ema_norm": jnp.array(0.0, jnp.float32),
+                "struck": jnp.array(False)}
+
+    def apply(stacked, key, round_index, state):
+        del round_index
+        norm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(jnp.mean(l, axis=0).astype(jnp.float32)))
+            for l in jax.tree.leaves(stacked)))
+        first = state["init_norm"] < 0.0
+        init_norm = jnp.where(first, norm, state["init_norm"])
+        ema = jnp.where(first, norm,
+                        ema_decay * state["ema_norm"]
+                        + (1.0 - ema_decay) * norm)
+        strike = jnp.logical_or(state["struck"],
+                                ema < strike_fraction * init_norm)
+        base = sample_byzantine_mask(key, num_workers, num_byzantine,
+                                     rotate=False)
+        mask = jnp.logical_and(base, strike)
+        reported = jax.lax.cond(
+            strike, lambda s: atk(s, mask, key, **kw), lambda s: s, stacked)
+        new_state = {"init_norm": init_norm, "ema_norm": ema,
+                     "struck": strike}
+        return reported, mask, new_state
+
+    return AttackSchedule("stealth_then_strike", num_workers, num_byzantine,
+                          init_state, apply)

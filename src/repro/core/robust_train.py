@@ -75,15 +75,8 @@ def per_worker_grads(loss_fn: Callable, params, worker_batches, *,
     return grads, losses
 
 
-def aggregate(stacked_grads, cfg: RobustConfig, *, key, round_index):
-    """Attack simulation + robust aggregation.  Pure; jit-friendly."""
-    mask = byzantine.sample_byzantine_mask(
-        key, cfg.num_workers, cfg.num_byzantine,
-        rotate=cfg.rotate_byzantine, round_index=round_index)
-    attack = byzantine.get_attack(cfg.attack)
-    attack_kwargs = dict(cfg.attack_kwargs)
-    reported = attack(stacked_grads, mask, key, **attack_kwargs)
-
+def aggregate_reported(reported_grads, cfg: RobustConfig, *, key):
+    """Robust aggregation of already-(possibly-)corrupted reports."""
     agg = aggregators.get_aggregator(cfg.aggregator)
     kwargs: dict[str, Any] = {}
     if cfg.aggregator in ("gmom", "gmom_per_leaf"):
@@ -101,7 +94,18 @@ def aggregate(stacked_grads, cfg: RobustConfig, *, key, round_index):
         # do our omniscient attacks (they receive the same ``key``): the
         # attacker can adapt, which is exactly the §6 caveat under test.
         kwargs.update(key=jax.random.fold_in(key, 13))
-    return agg(reported, **kwargs)
+    return agg(reported_grads, **kwargs)
+
+
+def aggregate(stacked_grads, cfg: RobustConfig, *, key, round_index):
+    """Attack simulation + robust aggregation.  Pure; jit-friendly."""
+    mask = byzantine.sample_byzantine_mask(
+        key, cfg.num_workers, cfg.num_byzantine,
+        rotate=cfg.rotate_byzantine, round_index=round_index)
+    attack = byzantine.get_attack(cfg.attack)
+    attack_kwargs = dict(cfg.attack_kwargs)
+    reported = attack(stacked_grads, mask, key, **attack_kwargs)
+    return aggregate_reported(reported, cfg, key=key)
 
 
 def make_robust_train_step(loss_fn: Callable, optimizer, cfg: RobustConfig, *,
@@ -136,6 +140,107 @@ def make_robust_train_step(loss_fn: Callable, optimizer, cfg: RobustConfig, *,
         return params, opt_state, metrics
 
     return train_step
+
+
+# ---------------------------------------------------------------------------
+# scan-compiled multi-round training (the adversarial scenario substrate)
+
+def schedule_from_config(cfg: RobustConfig) -> byzantine.AttackSchedule:
+    """The AttackSchedule equivalent of the per-round ``aggregate`` path:
+    rotating (or static) Byzantine set, fixed attack — so the scan runner
+    reproduces the Python-loop trainer exactly."""
+    name = "rotating" if cfg.rotate_byzantine else "static"
+    return byzantine.make_schedule(
+        name, num_workers=cfg.num_workers, num_byzantine=cfg.num_byzantine,
+        attack=cfg.attack, attack_kwargs=cfg.attack_kwargs)
+
+
+def make_run_rounds(loss_fn: Callable, optimizer, cfg: RobustConfig, *,
+                    schedule: byzantine.AttackSchedule | None = None,
+                    loss_kwargs: dict | None = None,
+                    extra_metrics: Callable | None = None):
+    """Build a ``lax.scan``-compiled N-round trainer.
+
+    Returns ``run(params, opt_state, worker_batches, key, *, num_rounds,
+    start_round=0, attack_state=None, per_round_batches=False) ->
+    (params, opt_state, attack_state, metrics)`` where ``metrics`` leaves are
+    stacked over rounds.  All N rounds trace into ONE jitted scan whose carry
+    is (params, opt_state, attack_state) — a 50-round CPU scenario runs in
+    seconds instead of N dispatches of a per-step jit.
+
+    Round ``t`` uses ``jax.random.fold_in(key, t)`` as its step key, so the
+    scan reproduces a Python loop over ``make_robust_train_step`` driven with
+    the same per-round keys, step for step.
+
+    * fixed-batch mode (default): ``worker_batches`` is the paper's full
+      local data S_j, reused every round (Algorithm 1/2 exactly);
+    * ``per_round_batches=True``: leaves carry a leading num_rounds axis and
+      round t consumes slice t (the LM/streaming regime).
+
+    ``schedule`` defaults to the RobustConfig-equivalent rotating/static
+    schedule; pass any ``byzantine.AttackSchedule`` for multi-round
+    adversaries (ramp-up, coordinated-switch, stealth-then-strike, ...).
+    ``attack_state`` lets chunked callers (checkpoint boundaries) carry the
+    adversary's memory across calls.  ``extra_metrics(params, agg_grad)``
+    appends scenario-specific metrics (e.g. estimation error vs true θ).
+    """
+    schedule = schedule if schedule is not None else schedule_from_config(cfg)
+    loss_kwargs = loss_kwargs or {}
+
+    def _run(params, opt_state, worker_batches, key, attack_state,
+             num_rounds, start_round, per_round_batches):
+        if attack_state is None:
+            attack_state = schedule.init_state()
+        rounds = start_round + jnp.arange(num_rounds)
+
+        def body(carry, xs):
+            params, opt_state, astate = carry
+            if per_round_batches:
+                t, batch = xs
+            else:
+                t, batch = xs, worker_batches
+            key_t = jax.random.fold_in(key, t)
+            stacked, losses = per_worker_grads(loss_fn, params, batch,
+                                               loss_kwargs=loss_kwargs)
+            reported, mask, astate = schedule.apply(stacked, key_t, t, astate)
+            agg_grad = aggregate_reported(reported, cfg, key=key_t)
+            updates, opt_state = optimizer.update(agg_grad, opt_state, params)
+            params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, updates)
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(agg_grad)))
+            metrics = {
+                "loss_mean": jnp.mean(losses),
+                "loss_median": jnp.median(losses),
+                "agg_grad_norm": gnorm,
+                "byz_count": jnp.sum(mask.astype(jnp.int32)),
+            }
+            if extra_metrics is not None:
+                metrics.update(extra_metrics(params, agg_grad))
+            return (params, opt_state, astate), metrics
+
+        xs = (rounds, worker_batches) if per_round_batches else rounds
+        carry, metrics = jax.lax.scan(
+            body, (params, opt_state, attack_state), xs)
+        params, opt_state, attack_state = carry
+        return params, opt_state, attack_state, metrics
+
+    # start_round stays dynamic so chunked callers (checkpoint boundaries)
+    # don't recompile per chunk.
+    jitted = jax.jit(_run, static_argnames=("num_rounds",
+                                            "per_round_batches"))
+
+    def run(params, opt_state, worker_batches, key, *, num_rounds=None,
+            start_round=0, attack_state=None, per_round_batches=False):
+        if num_rounds is None:
+            if not per_round_batches:
+                raise ValueError("num_rounds is required with a fixed batch")
+            num_rounds = jax.tree.leaves(worker_batches)[0].shape[0]
+        return jitted(params, opt_state, worker_batches, key, attack_state,
+                      num_rounds, start_round, per_round_batches)
+
+    return run
 
 
 # ---------------------------------------------------------------------------

@@ -27,8 +27,10 @@ import time
 import traceback
 
 import jax
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHITECTURES, get_shape
+from repro.models.meshctx import set_mesh
 from repro.core import RobustConfig
 from repro.launch import mesh as mesh_lib
 from repro.launch import sharding, steps
@@ -52,7 +54,7 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     num_chips = mesh.size
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params_s = steps.abstract_params(cfg)
         pshard = sharding.param_shardings(params_s, mesh, cfg, fsdp=fsdp)
 
@@ -84,7 +86,7 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
         elif shape.kind == "prefill":
             bshard = jax.tree.map(
                 lambda x: jax.NamedSharding(
-                    mesh, jax.P(*((sharding.serve_batch_spec(
+                    mesh, P(*((sharding.serve_batch_spec(
                         mesh, shape.global_batch)[0],)
                         + (None,) * (len(x.shape) - 1)))),
                 batch)
@@ -99,8 +101,8 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
                 state_s, mesh, cfg, shape.global_batch)
             bspec = sharding.serve_batch_spec(mesh, shape.global_batch)
             baxis = bspec[0] if len(bspec) else None
-            tshard = jax.NamedSharding(mesh, jax.P(baxis, None))
-            posshard = jax.NamedSharding(mesh, jax.P(baxis))
+            tshard = jax.NamedSharding(mesh, P(baxis, None))
+            posshard = jax.NamedSharding(mesh, P(baxis))
             step_fn = steps.make_serve_step(cfg)
             jitted = jax.jit(step_fn,
                              in_shardings=(pshard, sshard, tshard, posshard),

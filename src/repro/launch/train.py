@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from repro import checkpoint, optim
 from repro.configs import ARCHITECTURES, get_config
 from repro.core import RobustConfig, byzantine, aggregators, \
-    make_robust_train_step
+    make_run_rounds
 from repro.data.tokens import TokenStream
 from repro.models import model as model_lib
 
@@ -61,7 +61,15 @@ def train_cpu(args) -> dict:
                       num_batches=args.num_batches)
     opt = optim.adamw(args.lr)
     loss_fn = lambda p, b: model_lib.loss_fn(p, b, cfg)  # noqa: E731
-    step_fn = jax.jit(make_robust_train_step(loss_fn, opt, rc))
+    schedule = None
+    if args.schedule:
+        schedule = byzantine.make_schedule(
+            args.schedule, num_workers=m, num_byzantine=args.byzantine,
+            attack=args.attack)
+    # Scan-compiled multi-round runner: rounds run in chunks of
+    # --scan-chunk, each chunk a single XLA dispatch (the Python loop only
+    # handles logging and checkpoint boundaries).
+    run = make_run_rounds(loss_fn, opt, rc, schedule=schedule)
 
     key = jax.random.PRNGKey(args.seed)
     params = model_lib.init(key, cfg)
@@ -72,22 +80,42 @@ def train_cpu(args) -> dict:
         params = checkpoint.restore(args.ckpt_dir, start, params)
         print(f"[train] restored step {start} from {args.ckpt_dir}")
 
+    if start > 0 and schedule is not None and schedule.init_state():
+        print("[train] WARNING: stateful attack schedule "
+              f"{schedule.name!r} restarts with fresh adversary state on "
+              "resume (attack state is not checkpointed)")
+
+    step_key = jax.random.fold_in(key, 10_000)
+    chunk = max(1, args.scan_chunk)
+    if args.ckpt_dir:
+        chunk = min(chunk, args.ckpt_every)
     history = []
+    attack_state = None
     t0 = time.time()
-    for i in range(start, args.steps):
-        batch = build_cpu_batch(cfg, stream, i, jax.random.fold_in(key, i))
-        params, opt_state, metrics = step_fn(
-            params, opt_state, batch, jax.random.fold_in(key, 10_000 + i), i)
-        history.append({k: float(v) for k, v in metrics.items()})
-        if i % args.log_every == 0 or i == args.steps - 1:
-            print(f"[train] step {i:4d} loss_median="
+    i = start
+    while i < args.steps:
+        n = min(chunk, args.steps - i)
+        if args.ckpt_dir:   # never scan across a checkpoint boundary
+            n = min(n, args.ckpt_every - i % args.ckpt_every)
+        rounds = [build_cpu_batch(cfg, stream, j, jax.random.fold_in(key, j))
+                  for j in range(i, i + n)]
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *rounds)
+        params, opt_state, attack_state, metrics = run(
+            params, opt_state, batch, step_key, start_round=i,
+            attack_state=attack_state, per_round_batches=True)
+        for j in range(n):
+            history.append({k: float(v[j]) for k, v in metrics.items()})
+        i += n
+        if (i - 1) % args.log_every < n or i == args.steps:
+            print(f"[train] step {i - 1:4d} loss_median="
                   f"{history[-1]['loss_median']:.4f} "
                   f"gnorm={history[-1]['agg_grad_norm']:.3f} "
                   f"({time.time() - t0:.1f}s)")
-        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
-            checkpoint.save(args.ckpt_dir, i + 1, params)
+        if args.ckpt_dir and i % args.ckpt_every == 0:
+            checkpoint.save(args.ckpt_dir, i, params)
     result = {"arch": args.arch, "aggregator": args.aggregator,
               "attack": args.attack, "byzantine": args.byzantine,
+              "schedule": args.schedule or rc_schedule_name(rc),
               "final_loss": history[-1]["loss_median"],
               "first_loss": history[0]["loss_median"],
               "history": history}
@@ -95,6 +123,10 @@ def train_cpu(args) -> dict:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)
     return result
+
+
+def rc_schedule_name(rc: RobustConfig) -> str:
+    return "rotating" if rc.rotate_byzantine else "static"
 
 
 def train_pod(args):
@@ -117,6 +149,11 @@ def main(argv=None):
     p.add_argument("--num-batches", type=int, default=None, dest="num_batches")
     p.add_argument("--attack", default="sign_flip",
                    choices=byzantine.available())
+    p.add_argument("--schedule", default=None,
+                   choices=byzantine.available_schedules(),
+                   help="multi-round attack schedule (default: rotating)")
+    p.add_argument("--scan-chunk", type=int, default=10, dest="scan_chunk",
+                   help="rounds fused into one lax.scan dispatch")
     p.add_argument("--aggregator", default="gmom",
                    choices=aggregators.available())
     p.add_argument("--batch", type=int, default=16)

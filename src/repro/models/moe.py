@@ -19,7 +19,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.models import layers
+from repro.models import layers, meshctx
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,13 +74,7 @@ def route(params, spec: MoESpec, x_flat):
 
 
 def _ambient_mesh():
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-    except Exception:  # noqa: BLE001
-        return None
-    if mesh is None or not mesh.axis_names:
-        return None
-    return mesh
+    return meshctx.current_mesh()
 
 
 def _ep_applicable(spec: MoESpec, x, mesh) -> bool:
@@ -256,7 +250,7 @@ def _apply_expert_parallel(params, spec: MoESpec, x, mesh):
                 spec.router_aux_weight * aux + spec.router_z_weight * z)
 
     x_spec = P(d_ax, "model", None) if t_sharded else P(d_ax, None, None)
-    shmap = jax.shard_map(
+    shmap = meshctx.shard_map(
         body,
         mesh=mesh,
         in_specs=(P(), _wspec(gate_fsdp_axis), _wspec(gate_fsdp_axis),

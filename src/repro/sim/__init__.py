@@ -1,0 +1,20 @@
+"""Adversarial scenario engine.
+
+The multi-round counterpart of core/byzantine.py's single-round attack zoo:
+named scenarios (attack × schedule × aggregator on the paper's linear-
+regression testbed) with deterministic seeds, a scan-compiled runner, and
+checked-in golden metric traces for regression testing.
+
+    from repro import sim
+    trace = sim.run_scenario("linreg/gmom/sign_flip/stealth_then_strike")
+"""
+
+from repro.sim.engine import build_schedule, run_scenario  # noqa: F401
+from repro.sim.scenarios import (  # noqa: F401
+    Scenario,
+    available,
+    get_scenario,
+    golden_scenarios,
+    register,
+)
+from repro.sim import goldens  # noqa: F401

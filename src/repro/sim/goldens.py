@@ -1,0 +1,143 @@
+"""Golden metric traces for registered scenarios.
+
+A golden is a canonical-form JSON serialization of a scenario trace: floats
+rounded to 6 significant digits, keys sorted, compact separators, trailing
+newline — so two runs of the same scenario on the same machine produce
+byte-identical files, and any regression in the training/aggregation/attack
+stack shows up as a diff against the checked-in file.
+
+Workflow:
+    PYTHONPATH=src python -m repro.sim.goldens --check    # compare all
+    PYTHONPATH=src python -m repro.sim.goldens --update   # re-record all
+
+When a PR intentionally changes numerics (new aggregator default, different
+grouping, ...), re-record and commit the new goldens alongside the change.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "goldens")
+_SIG_DIGITS = 6
+
+
+def canonicalize(obj):
+    """Round all floats to 6 significant digits, recursively."""
+    if isinstance(obj, bool):
+        return obj
+    if isinstance(obj, float):
+        return float(f"{obj:.{_SIG_DIGITS}g}")
+    if isinstance(obj, dict):
+        return {k: canonicalize(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [canonicalize(v) for v in obj]
+    return obj
+
+
+def trace_bytes(trace: dict) -> bytes:
+    return (json.dumps(canonicalize(trace), sort_keys=True,
+                       separators=(",", ": "), indent=0) + "\n").encode()
+
+
+def golden_path(name: str) -> str:
+    return os.path.join(GOLDEN_DIR, name.replace("/", "__") + ".json")
+
+
+def save_golden(name: str, trace: dict) -> str:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    path = golden_path(name)
+    with open(path, "wb") as f:
+        f.write(trace_bytes(trace))
+    return path
+
+
+def load_golden(name: str) -> dict:
+    with open(golden_path(name), "rb") as f:
+        return json.load(f)
+
+
+def compare_traces(trace: dict, golden: dict, *, rtol: float = 1e-3,
+                   atol: float = 1e-6, _path: str = "") -> list[str]:
+    """Structural comparison with float tolerance; returns mismatch list
+    (empty == match)."""
+    trace = canonicalize(trace)
+    golden = canonicalize(golden)
+
+    def walk(a, b, path):
+        if isinstance(a, dict) and isinstance(b, dict):
+            for k in sorted(set(a) | set(b)):
+                if k not in a or k not in b:
+                    yield f"{path}.{k}: present in only one trace"
+                else:
+                    yield from walk(a[k], b[k], f"{path}.{k}")
+        elif isinstance(a, list) and isinstance(b, list):
+            if len(a) != len(b):
+                yield f"{path}: length {len(a)} vs {len(b)}"
+            else:
+                for i, (x, y) in enumerate(zip(a, b)):
+                    yield from walk(x, y, f"{path}[{i}]")
+        elif isinstance(a, (int, float)) and isinstance(b, (int, float)) \
+                and not isinstance(a, bool) and not isinstance(b, bool):
+            if abs(a - b) > atol + rtol * max(abs(a), abs(b)):
+                yield f"{path}: {a} != {b}"
+        elif a != b:
+            yield f"{path}: {a!r} != {b!r}"
+
+    return list(walk(trace, golden, _path or "trace"))
+
+
+def record_all(*, update: bool = False) -> dict[str, list[str]]:
+    """Run every golden scenario; compare (or overwrite) its golden file.
+
+    Returns {scenario name: mismatches} — all-empty values mean green.
+    """
+    from repro.sim.engine import run_scenario
+    from repro.sim.scenarios import golden_scenarios
+
+    results: dict[str, list[str]] = {}
+    for sc in golden_scenarios():
+        trace = run_scenario(sc)
+        if update:
+            save_golden(sc.name, trace)
+            results[sc.name] = []
+        elif not os.path.exists(golden_path(sc.name)):
+            # check mode must not mutate the tree or green-light a
+            # scenario that has no checked-in reference
+            results[sc.name] = ["golden file missing — record it with "
+                                "`python -m repro.sim.goldens --update`"]
+        else:
+            results[sc.name] = compare_traces(trace, load_golden(sc.name))
+    return results
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--update", action="store_true",
+                   help="re-record all golden traces")
+    p.add_argument("--check", action="store_true",
+                   help="compare current traces against checked-in goldens")
+    p.add_argument("--list", action="store_true",
+                   help="list golden scenarios and exit")
+    args = p.parse_args(argv)
+    if args.list:
+        from repro.sim.scenarios import golden_scenarios
+        for sc in golden_scenarios():
+            print(sc.name, "->", golden_path(sc.name))
+        return 0
+    results = record_all(update=args.update)
+    bad = {k: v for k, v in results.items() if v}
+    for name in results:
+        status = "MISMATCH" if name in bad else \
+            ("updated" if args.update else "ok")
+        print(f"[goldens] {name}: {status}")
+        for line in bad.get(name, [])[:8]:
+            print(f"    {line}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -68,12 +68,17 @@ def test_mean_breaks_all_robust_survive():
         assert err < 0.5, f"{name} failed: {err}"
 
 
+# tier-1 covers the same claim (gmom bounded under every attack, same m/q/k)
+# via tests/test_defense_matrix.py::test_robust_aggregators_stay_bounded;
+# this variant exercises the RobustConfig aggregate() entry point.
+@pytest.mark.slow
 @pytest.mark.parametrize("attack", byzantine.available())
 def test_gmom_survives_every_attack(attack):
     m = 12
     s = _stacked(m)
     cfg = RobustConfig(num_workers=m, num_byzantine=2, attack=attack,
-                       aggregator="gmom", num_batches=6)
+                       aggregator="gmom", num_batches=6,
+                       gmom_max_iters=20, gmom_tol=1e-6)
     out = aggregate(s, cfg, key=jax.random.PRNGKey(3), round_index=0)
     err = float(jnp.linalg.norm(out["w"] - 1.0))
     assert err < 0.5, f"gmom under {attack}: err={err}"
@@ -119,3 +124,41 @@ def test_krum_selects_honest_worker():
                                               scale=100.0)
     out = aggregators.krum_aggregator(corrupted, num_byzantine=2)
     assert float(jnp.linalg.norm(out["w"] - 1.0)) < 0.5
+
+
+def test_bottom_k_mask_exact_under_ties():
+    """Regression: thresholding by the k-th smallest value selects MORE than
+    k entries when scores tie; rank selection must pick exactly k."""
+    for scores in [jnp.zeros((8,)),                       # all tied
+                   jnp.array([1.0, 1.0, 1.0, 2.0, 2.0]),  # tie at threshold
+                   jnp.array([3.0, 1.0, 2.0, 0.5])]:
+        for k in range(1, scores.shape[0] + 1):
+            sel = aggregators.bottom_k_mask(scores, k)
+            assert float(jnp.sum(sel)) == k, (scores, k)
+            # selected scores are all <= every unselected score
+            if k < scores.shape[0]:
+                assert float(jnp.max(jnp.where(sel > 0, scores, -jnp.inf))) \
+                    <= float(jnp.min(jnp.where(sel > 0, jnp.inf, scores)))
+
+
+def test_random_select_averages_exactly_n_sel():
+    """random_select must average exactly n_sel = floor(frac·m) gradients:
+    with one-hot rows the output recovers the selection mask directly."""
+    m = 8
+    eye = {"w": jnp.eye(m, dtype=jnp.float32)}
+    for seed in range(6):
+        out = aggregators.random_select_aggregator(
+            eye, key=jax.random.PRNGKey(seed), subset_fraction=0.5)
+        sel = np.asarray(out["w"]) * (m // 2)
+        np.testing.assert_allclose(sel.sum(), m // 2, atol=1e-5)
+        assert set(np.round(sel, 5)) <= {0.0, 1.0}
+
+
+def test_norm_select_exact_under_colluding_ties():
+    """Colluders reporting identical gradients tie in norm; norm_select must
+    still keep exactly m - q gradients."""
+    m = 6
+    g = jnp.ones((m, 4), jnp.float32)
+    g = g.at[0].set(5.0).at[1].set(5.0)   # two tied large-norm colluders
+    out = aggregators.norm_select_aggregator({"w": g}, num_byzantine=2)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.ones(4), atol=1e-6)

@@ -28,6 +28,7 @@ def test_moe_router_topk_and_renorm():
     assert float(aux) > 0 and float(z) >= 0
 
 
+@pytest.mark.slow
 def test_moe_full_capacity_equals_dense_mixture():
     """With no drops, MoE output == sum_k w_k * FFN_{e_k}(x) per token."""
     spec = _moe_spec(capacity_factor=100.0)
@@ -91,6 +92,7 @@ def test_wkv_scan_manual_recurrence():
     np.testing.assert_allclose(np.asarray(final[0, 0]), S, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_rwkv_decay_in_unit_interval():
     spec = rwkv.RWKVSpec(d_model=32, d_ff=64, head_dim=8)
     params = rwkv.init(jax.random.PRNGKey(0), spec, dtype=jnp.float32)
@@ -143,6 +145,7 @@ def test_ssd_chunked_matches_naive(chunk):
     np.testing.assert_allclose(np.asarray(final), h_ref, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_ssd_carried_state_continuation():
     B, T, H, P, N = 1, 8, 2, 4, 3
     key = jax.random.PRNGKey(1)

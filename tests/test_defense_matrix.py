@@ -1,0 +1,122 @@
+"""Every registered aggregator × every registered attack.
+
+Two layers of guarantees, both from the paper:
+(a) mechanics — aggregating corrupted reports preserves the parameter
+    pytree's structure, shapes, and dtypes for EVERY (aggregator, attack);
+(b) tolerance — with q <= (m-1)/2 faults (and 2(1+eps)q <= k batches for
+    GMoM), every *robust* aggregator keeps the aggregate within bounded
+    distance of the honest mean, while plain ``mean`` (Algorithm 1) is
+    dragged arbitrarily far by a single attack (§1.3).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import RobustConfig, aggregate, aggregators, byzantine
+
+M = 12           # workers
+Q = 2            # byzantine: q <= (m-1)/2 and 2(1+eps)q = 4.4 <= k = 6
+K = 6            # batches
+LOC = 1.0        # honest gradients ~ N(LOC, 0.05) per coordinate
+
+# Aggregators with a bounded-deviation guarantee at q <= (m-1)/2.  The
+# selection rules (paper §6) and norm clipping are *not* in this set: the
+# omniscient adversary defeats random_select (it sees the server's bits),
+# small-norm attacks slip through norm_select/norm_clip_mean by design.
+ROBUST = ("gmom", "gmom_per_leaf", "geomed", "coordinate_median",
+          "trimmed_mean", "krum")
+
+
+def _stacked(m=M, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray((rng.normal(size=(m, 5)) * 0.05 + LOC), jnp.float32),
+        "b": {"x": jnp.asarray((rng.normal(size=(m, 2, 3)) * 0.05 + LOC),
+                               jnp.float32)},
+    }
+
+
+def _dist_from_honest_mean(out, honest_mean):
+    return float(jnp.sqrt(sum(
+        jnp.sum(jnp.square(a.astype(jnp.float32) - b.astype(jnp.float32)))
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(honest_mean)))))
+
+
+def _cfg(aggregator, attack):
+    # few Weiszfeld iterations: the matrix is 11 aggregators × 10 attacks of
+    # eager evaluation, and a dozen iterations converge at this scale.
+    return RobustConfig(num_workers=M, num_byzantine=Q, num_batches=K,
+                        aggregator=aggregator, attack=attack,
+                        gmom_max_iters=20, gmom_tol=1e-6)
+
+
+@pytest.mark.parametrize("attack", byzantine.available())
+@pytest.mark.parametrize("aggregator", aggregators.available())
+def test_shapes_dtypes_preserved(aggregator, attack):
+    s = _stacked()
+    cfg = _cfg(aggregator, attack)
+    out = aggregate(s, cfg, key=jax.random.PRNGKey(0), round_index=0)
+    assert jax.tree.structure(out) == jax.tree.structure(s)
+    for o, i in zip(jax.tree.leaves(out), jax.tree.leaves(s)):
+        assert o.shape == i.shape[1:], (aggregator, attack)
+        assert o.dtype == i.dtype, (aggregator, attack)
+        assert bool(jnp.all(jnp.isfinite(o))), (aggregator, attack)
+
+
+@pytest.mark.parametrize("attack", byzantine.available())
+@pytest.mark.parametrize("aggregator", ROBUST)
+def test_robust_aggregators_stay_bounded(aggregator, attack):
+    """Paper tolerance claim: bounded deviation from the honest mean under
+    every attack at q <= (m-1)/2."""
+    s = _stacked()
+    honest_mean = aggregators.mean_aggregator(s)
+    cfg = _cfg(aggregator, attack)
+    out = aggregate(s, cfg, key=jax.random.PRNGKey(1), round_index=0)
+    dist = _dist_from_honest_mean(out, honest_mean)
+    assert dist < 0.75, f"{aggregator} under {attack}: dist={dist}"
+
+
+@pytest.mark.parametrize("attack", ["sign_flip", "mean_shift",
+                                    "random_noise"])
+def test_mean_breaks(attack):
+    """Algorithm 1 has breakdown point 0: one adversarial round moves the
+    mean arbitrarily."""
+    s = _stacked()
+    honest_mean = aggregators.mean_aggregator(s)
+    cfg = _cfg("mean", attack)
+    out = aggregate(s, cfg, key=jax.random.PRNGKey(2), round_index=0)
+    dist = _dist_from_honest_mean(out, honest_mean)
+    assert dist > 5.0, f"mean unexpectedly robust under {attack}: {dist}"
+
+
+def test_norm_stealth_evades_trimming_but_not_gmom():
+    """The adaptive attack hides under the Remark-2 trim threshold (all trim
+    weights stay 1) yet GMoM still tolerates it via the median."""
+    from repro.core.geometric_median import batch_mean_norms, trim_weights
+    s = _stacked()
+    mask = jnp.arange(M) < Q
+    reported = byzantine.get_attack("norm_stealth")(
+        s, mask, jax.random.PRNGKey(3))
+    means = aggregators.batch_means(reported, K)
+    w = trim_weights(batch_mean_norms(means), multiplier=3.0)
+    np.testing.assert_array_equal(np.asarray(w), np.ones(K))  # no trim fires
+    out = aggregators.gmom_aggregator(reported, num_batches=K,
+                                      num_byzantine=Q)
+    dist = _dist_from_honest_mean(out, aggregators.mean_aggregator(s))
+    assert dist < 0.75
+
+
+def test_alie_shifts_mean_by_z_std():
+    """ALIE's report sits mean - z·std per coordinate: small enough to pass
+    outlier filters, biased enough to hurt the mean."""
+    s = _stacked()
+    mask = jnp.arange(M) < Q
+    reported = byzantine.get_attack("alie")(s, mask, jax.random.PRNGKey(4))
+    # crafted rows all equal, and within ~2 std of the honest mean
+    crafted = np.asarray(reported["w"])[:Q]
+    np.testing.assert_allclose(crafted[0], crafted[1], atol=1e-6)
+    honest = np.asarray(s["w"])[Q:]
+    z_dist = np.abs(crafted[0] - honest.mean(0)) / (honest.std(0) + 1e-9)
+    assert float(z_dist.max()) < 4.0

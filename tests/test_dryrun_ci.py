@@ -9,12 +9,16 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.models.meshctx import set_mesh
     from repro.configs import get_config
     from repro.configs.base import InputShape
     from repro.core import RobustConfig
@@ -26,7 +30,7 @@ SCRIPT = textwrap.dedent("""
     kind = "{kind}"
     mesh = mesh_lib.make_debug_mesh(data=2, model=2, pod=2)
     cfg = get_config(arch).reduced()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params_s = steps.abstract_params(cfg)
         pshard = sharding.param_shardings(params_s, mesh, cfg)
         if kind == "train":
@@ -56,8 +60,8 @@ SCRIPT = textwrap.dedent("""
             fn = steps.make_serve_step(cfg)
             lowered = jax.jit(
                 fn, in_shardings=(pshard, sshard,
-                                  jax.NamedSharding(mesh, jax.P(baxis, None)),
-                                  jax.NamedSharding(mesh, jax.P(baxis))),
+                                  jax.NamedSharding(mesh, P(baxis, None)),
+                                  jax.NamedSharding(mesh, P(baxis))),
                 donate_argnums=(1,)).lower(params_s, state, tok, pos)
         compiled = lowered.compile()
         cost = analysis.collective_bytes(compiled.as_text())

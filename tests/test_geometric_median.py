@@ -1,36 +1,79 @@
-"""Property tests for the geometric median (paper §2.1, Lemma 1)."""
+"""Property tests for the geometric median (paper §2.1, Lemma 1).
+
+``hypothesis`` is optional: when installed the properties run under its
+strategies; otherwise the same checks run over a parametrized set of
+deterministic seeds so the core properties are always exercised (the tier-1
+environment does not ship hypothesis).
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import geometric_median, geometric_median_pytree, \
     trim_weights, batch_mean_norms
 from repro.core.theory import c_alpha
 
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+FALLBACK_SEEDS = list(range(5))
 
 
-def _points(draw, n_min=2, n_max=12, d_min=1, d_max=6):
-    n = draw(st.integers(n_min, n_max))
-    d = draw(st.integers(d_min, d_max))
-    data = draw(st.lists(
-        st.lists(st.floats(-100, 100, allow_nan=False, width=32),
-                 min_size=d, max_size=d),
-        min_size=n, max_size=n))
-    return np.array(data, np.float32)
+def _random_points(seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 13))
+    d = int(rng.integers(1, 7))
+    return (rng.normal(size=(n, d)) * 10).astype(np.float32)
 
 
-points_strategy = st.builds(lambda seed, n, d: np.random.default_rng(seed)
-                            .normal(size=(n, d)).astype(np.float32) * 10,
-                            st.integers(0, 2**31 - 1),
-                            st.integers(2, 12), st.integers(1, 6))
+def property_test(*, needs_shift=False, needs_seed=False):
+    """Run the check under hypothesis when available, else over seeds.
+
+    The wrapped check takes ``pts`` (and optionally ``shift``/``seed``).
+    """
+    def deco(check):
+        if HAVE_HYPOTHESIS:
+            if needs_shift:
+                return given(points_strategy,
+                             st.lists(st.floats(-50, 50, allow_nan=False,
+                                                width=32),
+                                      min_size=6, max_size=6))(check)
+            if needs_seed:
+                return given(points_strategy,
+                             st.integers(0, 2**31 - 1))(check)
+            return given(points_strategy)(check)
+
+        @pytest.mark.parametrize("seed", FALLBACK_SEEDS)
+        def fallback(seed):
+            pts = _random_points(seed)
+            rng = np.random.default_rng(seed + 1000)
+            if needs_shift:
+                check(pts, list(rng.uniform(-50, 50, size=6)))
+            elif needs_seed:
+                check(pts, int(rng.integers(0, 2**31 - 1)))
+            else:
+                check(pts)
+        fallback.__name__ = check.__name__
+        fallback.__doc__ = check.__doc__
+        return fallback
+    return deco
 
 
-@given(points_strategy)
+if HAVE_HYPOTHESIS:
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
+    points_strategy = st.builds(
+        lambda seed, n, d: np.random.default_rng(seed)
+        .normal(size=(n, d)).astype(np.float32) * 10,
+        st.integers(0, 2**31 - 1), st.integers(2, 12), st.integers(1, 6))
+
+
+@property_test()
 def test_objective_not_worse_than_mean(pts):
     """geomed minimizes sum of distances => objective <= mean's objective."""
     gm = geometric_median(jnp.asarray(pts), max_iters=128, tol=1e-10)
@@ -42,9 +85,7 @@ def test_objective_not_worse_than_mean(pts):
     assert obj(np.asarray(gm)) <= obj(mean) + 1e-3 * (1 + abs(obj(mean)))
 
 
-@given(points_strategy,
-       st.lists(st.floats(-50, 50, allow_nan=False, width=32),
-                min_size=6, max_size=6))
+@property_test(needs_shift=True)
 def test_translation_equivariance(pts, shift):
     shift = np.array(shift[:pts.shape[1]], np.float32)
     g1 = np.asarray(geometric_median(jnp.asarray(pts), max_iters=96))
@@ -52,7 +93,7 @@ def test_translation_equivariance(pts, shift):
     np.testing.assert_allclose(g1 + shift, g2, atol=2e-2)
 
 
-@given(points_strategy, st.integers(0, 2**31 - 1))
+@property_test(needs_seed=True)
 def test_permutation_invariance(pts, seed):
     perm = np.random.default_rng(seed).permutation(pts.shape[0])
     g1 = np.asarray(geometric_median(jnp.asarray(pts)))
@@ -60,7 +101,7 @@ def test_permutation_invariance(pts, seed):
     np.testing.assert_allclose(g1, g2, atol=1e-3)
 
 
-@given(points_strategy)
+@property_test()
 def test_within_bounding_box(pts):
     """geomed lies in the convex hull => inside the bounding box."""
     g = np.asarray(geometric_median(jnp.asarray(pts), max_iters=128))

@@ -1,26 +1,35 @@
 """Pallas kernel validation: interpret-mode vs pure-jnp oracles
-(shape/dtype sweeps + hypothesis)."""
+(shape/dtype sweeps + hypothesis when available, seed sweeps otherwise)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import geometric_median
 from repro.kernels.attention import flash, ref as attn_ref
 from repro.kernels.geomed import geomed, ops as geomed_ops, \
     ref as geomed_ref
 
-settings.register_profile("kernels", max_examples=10, deadline=None)
-settings.load_profile("kernels")
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    settings.register_profile("kernels", max_examples=10, deadline=None)
+    settings.load_profile("kernels")
 
 
 # ---------------------------------------------------------------------------
 # geomed kernel
 
-@pytest.mark.parametrize("k,d", [(2, 64), (8, 1000), (16, 4096), (64, 512),
-                                 (5, 777)])
+@pytest.mark.parametrize(
+    "k,d", [(2, 64), (8, 1000),
+            pytest.param(16, 4096, marks=pytest.mark.slow),
+            pytest.param(64, 512, marks=pytest.mark.slow),
+            (5, 777)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_geomed_sqdist_sweep(k, d, dtype):
     key = jax.random.PRNGKey(k * d)
@@ -44,7 +53,16 @@ def test_geomed_step_sweep(k, d):
                                rtol=1e-4, atol=1e-5)
 
 
-@given(st.integers(2, 12), st.integers(1, 200), st.integers(0, 2**31 - 1))
+def _geomed_cases():
+    if HAVE_HYPOTHESIS:
+        return given(st.integers(2, 12), st.integers(1, 200),
+                     st.integers(0, 2**31 - 1))
+    return pytest.mark.parametrize(
+        "k,d,seed", [(2, 1, 0), (3, 17, 1), (8, 64, 2), (12, 200, 3),
+                     (5, 100, 4)])
+
+
+@_geomed_cases()
 def test_geomed_full_vs_core(k, d, seed):
     Z = jnp.asarray(
         np.random.default_rng(seed).normal(size=(k, d)).astype(np.float32))
@@ -61,16 +79,20 @@ def test_geomed_full_vs_core(k, d, seed):
 ATTN_CASES = [
     # (B, Tq, Tk, H, KV, hd, causal, window)
     (2, 64, 64, 4, 2, 32, True, None),
-    (1, 128, 128, 8, 8, 64, True, None),
+    pytest.param((1, 128, 128, 8, 8, 64, True, None),
+                 marks=pytest.mark.slow),
     (2, 100, 100, 4, 1, 32, True, None),        # unaligned T
-    (1, 256, 256, 4, 2, 64, True, 64),          # sliding window
+    pytest.param((1, 256, 256, 4, 2, 64, True, 64),   # sliding window
+                 marks=pytest.mark.slow),
     (2, 64, 64, 4, 4, 32, False, None),         # bidirectional
     (1, 96, 96, 6, 2, 16, True, 32),            # window + GQA + odd heads
 ]
 
 
 @pytest.mark.parametrize("case", ATTN_CASES)
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "dtype", [jnp.float32,
+              pytest.param(jnp.bfloat16, marks=pytest.mark.slow)])
 def test_flash_attention_sweep(case, dtype):
     B, Tq, Tk, H, KV, hd, causal, window = case
     key = jax.random.PRNGKey(hash(case) % (2**31))
@@ -89,9 +111,18 @@ def test_flash_attention_sweep(case, dtype):
                                atol=tol, rtol=tol)
 
 
-@given(st.integers(1, 2), st.sampled_from([16, 48, 64]),
-       st.sampled_from([(4, 2), (4, 4), (2, 1)]),
-       st.booleans(), st.integers(0, 2**31 - 1))
+def _flash_cases():
+    if HAVE_HYPOTHESIS:
+        return given(st.integers(1, 2), st.sampled_from([16, 48, 64]),
+                     st.sampled_from([(4, 2), (4, 4), (2, 1)]),
+                     st.booleans(), st.integers(0, 2**31 - 1))
+    return pytest.mark.parametrize(
+        "B,T,heads,causal,seed",
+        [(1, 16, (4, 2), True, 0), (2, 48, (4, 4), False, 1),
+         pytest.param(1, 64, (2, 1), True, 2, marks=pytest.mark.slow)])
+
+
+@_flash_cases()
 def test_flash_attention_property(B, T, heads, causal, seed):
     H, KV = heads
     hd = 16

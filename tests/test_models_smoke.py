@@ -9,6 +9,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro import optim
 from repro.configs import ARCHITECTURES, get_config
 from repro.core import RobustConfig, make_robust_train_step

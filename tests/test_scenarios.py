@@ -1,0 +1,92 @@
+"""Scenario engine: the paper's headline claim as executable tests, plus
+golden-trace regression checks."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import sim
+from repro.sim import goldens
+from repro.sim.scenarios import available, get_scenario, golden_scenarios
+
+SCHEDULES = ("static", "rotating", "ramp_up", "coordinated_switch",
+             "stealth_then_strike")
+
+
+def test_registry_sanity():
+    names = available()
+    assert len(names) == len(set(names))
+    for s in SCHEDULES:
+        assert f"linreg/gmom/sign_flip/{s}" in names
+    with pytest.raises(KeyError):
+        get_scenario("nope")
+    sc = get_scenario("linreg/gmom/sign_flip/rotating")
+    assert sc.paper_floor > 0
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_gmom_converges_under_every_schedule(schedule):
+    """Theorem 1 / Corollary 1: with 2(1+eps)q <= k (and q <= (m-1)/2), GMoM
+    drives the estimation error to the sqrt(d(2q+1)/N) scale no matter how
+    the Byzantine set and attack vary across rounds."""
+    tr = sim.run_scenario(f"linreg/gmom/sign_flip/{schedule}")
+    assert tr["final_est_error"] < 1.2 * tr["paper_floor"], tr
+    # exponential decrease early on (Corollary 1's contraction)
+    errs = tr["est_error"]
+    assert errs[5] < 0.5 * errs[0]
+
+
+def test_mean_diverges_under_attack_but_converges_failure_free():
+    """Algorithm 1's breakdown: a single Byzantine worker per round sends
+    plain BGD to infinity, while the failure-free baseline converges."""
+    broken = sim.run_scenario("linreg/mean/sign_flip/rotating")
+    clean = sim.run_scenario("linreg/mean/none/static")
+    assert broken["final_est_error"] > 10.0
+    assert clean["final_est_error"] < 1.2 * clean["paper_floor"]
+
+
+def test_adaptive_attacks_stay_tolerated():
+    """The two new omniscient attacks (ALIE, norm-stealth) do not break
+    GMoM within the tolerance region.  Reads the checked-in goldens (their
+    fidelity is enforced by test_goldens_match_checked_in) to avoid
+    re-running the scenarios."""
+    for name in ("linreg/gmom/alie/static",
+                 "linreg/gmom/norm_stealth/rotating"):
+        tr = goldens.load_golden(name)
+        assert tr["final_est_error"] < 2.0 * tr["paper_floor"], name
+
+
+def test_traces_byte_stable_across_runs():
+    """Two consecutive runs of the same scenario serialize to identical
+    bytes (determinism is what makes goldens trustworthy)."""
+    name = "linreg/gmom/sign_flip/rotating"
+    b1 = goldens.trace_bytes(sim.run_scenario(name, rounds=10))
+    b2 = goldens.trace_bytes(sim.run_scenario(name, rounds=10))
+    assert b1 == b2
+
+
+def test_goldens_match_checked_in():
+    """Every golden scenario reproduces its checked-in trace."""
+    assert golden_scenarios(), "no golden scenarios registered"
+    for sc in golden_scenarios():
+        trace = sim.run_scenario(sc)
+        mismatches = goldens.compare_traces(
+            trace, goldens.load_golden(sc.name))
+        assert not mismatches, (sc.name, mismatches[:5])
+
+
+def test_golden_files_are_canonical_bytes():
+    """Checked-in files are exactly the canonical serialization (no manual
+    edits; `python -m repro.sim.goldens --update` is the only writer)."""
+    for sc in golden_scenarios():
+        with open(goldens.golden_path(sc.name), "rb") as f:
+            on_disk = f.read()
+        assert on_disk == goldens.trace_bytes(goldens.load_golden(sc.name))
+
+
+def test_compare_traces_detects_drift():
+    tr = {"a": 1.0, "b": [1.0, 2.0]}
+    assert goldens.compare_traces(tr, {"a": 1.0, "b": [1.0, 2.0]}) == []
+    assert goldens.compare_traces(tr, {"a": 1.01, "b": [1.0, 2.0]})
+    assert goldens.compare_traces(tr, {"a": 1.0, "b": [1.0]})
+    assert goldens.compare_traces(tr, {"a": 1.0})

@@ -37,6 +37,7 @@ def _run_lm(aggregator, attack, steps=8, m=8):
     return losses
 
 
+@pytest.mark.slow
 def test_lm_training_robustness_end_to_end():
     """The paper's headline behaviour on a transformer LM:
     mean+attack diverges; gmom+attack tracks the attack-free run."""
@@ -92,6 +93,7 @@ def test_modality_stubs():
     assert p.shape == (2, 3, 4, 16)
 
 
+@pytest.mark.slow
 def test_train_driver_cli(tmp_path):
     """examples-style end-to-end: the training driver runs and learns."""
     out = tmp_path / "result.json"
