@@ -1,6 +1,8 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
+    FORMAT_VERSION,
     all_steps,
     latest_step,
+    read_manifest,
     restore,
     save,
 )

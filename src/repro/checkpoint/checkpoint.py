@@ -1,10 +1,17 @@
 """Msgpack-based pytree checkpointing (no orbax dependency).
 
 Layout: ``<dir>/step_<n>/ {manifest.msgpack, arrays.npz}``.  The manifest
-records the treedef (as a nested token structure), dtypes, and shapes; arrays
-are stored in a single compressed ``.npz``.  Atomic via write-to-tmp+rename.
+records leaf paths, dtypes, shapes, and a ``format_version``; arrays are
+stored in a single compressed ``.npz``.  Atomic via write-to-tmp+rename.
 
-Works for params, optimizer states (NamedTuples), and metrics dicts.
+Works for params, optimizer states (NamedTuples), and metrics dicts — and,
+as of format_version 2, the full ``repro.core.TrainState`` (params +
+opt_state + attack_state + round counter + PRNG key + metrics history).
+Version-1 checkpoints (params only, no ``format_version`` key) are still
+readable; callers can branch on ``read_manifest(...)['format_version']``.
+
+Restore is dtype-strict: a manifest/example dtype mismatch raises instead of
+silently casting (pass ``allow_cast=True`` to opt back into casting).
 """
 
 from __future__ import annotations
@@ -18,6 +25,10 @@ import jax.numpy as jnp
 import msgpack
 import numpy as np
 
+# 1 = params-only trees, no version key in the manifest (legacy).
+# 2 = manifest carries format_version; used for full-TrainState checkpoints.
+FORMAT_VERSION = 2
+
 
 def _flatten_with_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -26,12 +37,20 @@ def _flatten_with_paths(tree):
     return paths, leaves, treedef
 
 
-def save(directory: str, step: int, tree, *, keep: int | None = 3) -> str:
-    """Serialize ``tree`` under ``directory/step_<step>``; returns the path."""
+def save(directory: str, step: int, tree, *, keep: int | None = 3,
+         payload: str | None = None) -> str:
+    """Serialize ``tree`` under ``directory/step_<step>``; returns the path.
+
+    ``payload`` optionally tags WHAT the tree is (e.g. ``"train_state"``)
+    in the manifest, so restorers can tell a full TrainState from a bare
+    params tree instead of guessing from the format version.
+    """
     os.makedirs(directory, exist_ok=True)
     paths, leaves, _ = _flatten_with_paths(tree)
     arrays = {}
-    manifest = {"step": step, "leaves": []}
+    manifest = {"step": step, "format_version": FORMAT_VERSION, "leaves": []}
+    if payload is not None:
+        manifest["payload"] = payload
     for i, (p, leaf) in enumerate(zip(paths, leaves)):
         arr = np.asarray(leaf)
         key = f"leaf_{i}"
@@ -79,11 +98,31 @@ def latest_step(directory: str) -> int | None:
     return steps[-1] if steps else None
 
 
-def restore(directory: str, step: int, example_tree):
-    """Restore into the structure of ``example_tree`` (shape/dtype checked)."""
+def read_manifest(directory: str, step: int) -> dict:
+    """The raw manifest dict for ``directory/step_<step>``.
+
+    ``format_version`` is normalized: legacy (pre-versioning) checkpoints
+    report 1.  Leaf entries carry ``path``/``dtype``/``shape``.
+    """
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
+    manifest.setdefault("format_version", 1)
+    return manifest
+
+
+def restore(directory: str, step: int, example_tree, *,
+            allow_cast: bool = False):
+    """Restore into the structure of ``example_tree``.
+
+    Shapes and dtypes are checked against the manifest; a dtype mismatch
+    raises ``ValueError`` unless ``allow_cast=True`` (the stored array is
+    then cast to the example dtype — the pre-format_version-2 behaviour,
+    which silently truncated e.g. f32 optimizer moments to bf16).
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    manifest = read_manifest(directory, step)
+    dtypes = {e["path"]: e["dtype"] for e in manifest["leaves"]}
     with np.load(os.path.join(path, "arrays.npz")) as data:
         stored = {e["path"]: data[e["key"]] for e in manifest["leaves"]}
 
@@ -97,5 +136,9 @@ def restore(directory: str, step: int, example_tree):
         if tuple(arr.shape) != tuple(ex.shape):
             raise ValueError(
                 f"shape mismatch for {p!r}: ckpt {arr.shape} vs {ex.shape}")
+        if dtypes[p] != str(ex.dtype) and not allow_cast:
+            raise ValueError(
+                f"dtype mismatch for {p!r}: ckpt {dtypes[p]} vs "
+                f"{ex.dtype} (pass allow_cast=True to cast)")
         new_leaves.append(jnp.asarray(arr, dtype=ex.dtype))
     return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -5,6 +5,7 @@ Public API:
     aggregators.get_aggregator / available
     byzantine.get_attack / available / sample_byzantine_mask
     RobustConfig, make_robust_train_step, per_worker_grads, aggregate
+    TrainState, init_train_state, advance, save/restore_train_state
     grouping.make_grouping / choose_num_batches
     theory: paper constants & closed forms
 """
@@ -26,4 +27,13 @@ from repro.core.robust_train import (  # noqa: F401
     make_shardmap_aggregate,
     per_worker_grads,
     schedule_from_config,
+)
+from repro.core.train_state import (  # noqa: F401
+    TrainState,
+    advance,
+    append_history,
+    history_rows,
+    init_train_state,
+    restore_train_state,
+    save_train_state,
 )

@@ -279,7 +279,15 @@ class AttackSchedule:
     ``apply(stacked_honest_grads, key, round_index, state) ->
     (reported_grads, byz_mask, new_state)`` must be jit/scan-friendly:
     ``round_index`` is traced inside ``lax.scan`` and ``state`` (from
-    ``init_state()``) is the carried attack memory (fixed pytree structure).
+    ``init_state()``) is the carried attack memory.
+
+    Checkpoint contract: ``init_state()`` must return a pytree whose
+    structure is FIXED for the schedule's lifetime with array leaves only
+    (scalars as 0-d jnp arrays, ``()`` when stateless), and ``apply`` must
+    preserve that structure and every leaf dtype.  This is what lets
+    ``repro.core.TrainState`` serialize the adversary's memory alongside
+    params/opt_state so resumed runs replay bit-identically
+    (tests/test_train_state.py round-trips every registered schedule).
     """
     name: str
     num_workers: int

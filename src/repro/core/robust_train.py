@@ -181,8 +181,12 @@ def make_run_rounds(loss_fn: Callable, optimizer, cfg: RobustConfig, *,
     schedule; pass any ``byzantine.AttackSchedule`` for multi-round
     adversaries (ramp-up, coordinated-switch, stealth-then-strike, ...).
     ``attack_state`` lets chunked callers (checkpoint boundaries) carry the
-    adversary's memory across calls.  ``extra_metrics(params, agg_grad)``
-    appends scenario-specific metrics (e.g. estimation error vs true θ).
+    adversary's memory across calls — prefer driving the runner through
+    ``repro.core.train_state.advance``, which threads the whole
+    (params, opt_state, attack_state, round, key, history) TrainState and
+    is what save/restore_train_state checkpoint.  ``extra_metrics(params,
+    agg_grad)`` appends scenario-specific metrics (e.g. estimation error vs
+    true θ).
     """
     schedule = schedule if schedule is not None else schedule_from_config(cfg)
     loss_kwargs = loss_kwargs or {}

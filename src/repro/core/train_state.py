@@ -1,0 +1,170 @@
+"""The full, checkpointable state of a multi-round Byzantine GD run.
+
+The paper's convergence guarantee is a statement about ONE uninterrupted
+trajectory of rounds under a (possibly stateful, history-dependent)
+adversary.  Resuming from a params-only checkpoint breaks that trajectory:
+the optimizer moments reset, the adversary's memory (e.g. the
+``stealth_then_strike`` EMA/latch) resets, and the metrics trace restarts.
+``TrainState`` packages *everything* the trajectory depends on so that an
+interrupted-then-resumed run is bit-identical to an uninterrupted one:
+
+    params        model/estimator parameters
+    opt_state     optimizer state (repro.optim NamedTuples)
+    attack_state  the schedule's carried adversary memory
+                  (``AttackSchedule.init_state()`` pytree; ``()`` when
+                  stateless — fixed structure, array leaves only)
+    round_index   number of completed rounds (int32 scalar)
+    base_key      the PRNG key handed to ``make_run_rounds``'s runner
+                  (round t folds in t, so the key is constant across chunks)
+    history       accumulated per-round metrics, dict[str, (round_index,)]
+                  float32 arrays — byte-stable across save/restore
+
+Serialization goes through ``repro.checkpoint`` (format_version 2,
+dtype-strict restore).  ``restore_train_state`` rebuilds the example pytree
+for the history leaves from the checkpoint manifest, so callers only supply
+example params/opt_state and the schedule.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import byzantine
+
+# repro.checkpoint (and its msgpack dependency) is imported lazily inside
+# save/restore_train_state so that `import repro.core` keeps working in
+# environments without the checkpoint extras.
+TRAIN_STATE_PAYLOAD = "train_state"
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    attack_state: Any
+    round_index: jax.Array
+    base_key: jax.Array
+    history: Any
+
+
+def init_train_state(params, opt_state, base_key, *,
+                     schedule: byzantine.AttackSchedule | None = None,
+                     ) -> TrainState:
+    """Round-zero state: fresh adversary memory, empty history."""
+    attack_state = schedule.init_state() if schedule is not None else ()
+    return TrainState(params=params, opt_state=opt_state,
+                      attack_state=attack_state,
+                      round_index=jnp.zeros((), jnp.int32),
+                      base_key=base_key, history={})
+
+
+def append_history(history, metrics) -> dict:
+    """Concatenate a chunk's stacked per-round metrics onto ``history``.
+
+    Metrics are stored float32 — exactly the dtype the scan emits — so a
+    checkpoint round-trip reproduces ``float(v)`` bit-for-bit.
+    """
+    new = {k: np.asarray(v, np.float32) for k, v in metrics.items()}
+    if not history:
+        return new
+    if set(history) != set(new):
+        raise ValueError(
+            f"metrics keys changed across chunks: {sorted(history)} vs "
+            f"{sorted(new)}")
+    return {k: np.concatenate([np.asarray(history[k], np.float32), new[k]])
+            for k in new}
+
+
+def history_rows(history) -> list[dict]:
+    """The history as a list of per-round {metric: float} dicts (the
+    launch-driver logging format)."""
+    if not history:
+        return []
+    n = len(next(iter(history.values())))
+    return [{k: float(v[j]) for k, v in history.items()} for j in range(n)]
+
+
+def advance(run, state: TrainState, worker_batches, *, num_rounds=None,
+            per_round_batches: bool = False) -> tuple[TrainState, dict]:
+    """Run one chunk of rounds through a ``make_run_rounds`` runner.
+
+    Returns ``(new_state, chunk_metrics)``; ``new_state.history`` has the
+    chunk appended and ``round_index`` advanced, so chunked execution with a
+    checkpoint at any chunk boundary replays bit-identically.
+    """
+    params, opt_state, attack_state, metrics = run(
+        state.params, state.opt_state, worker_batches, state.base_key,
+        num_rounds=num_rounds, start_round=state.round_index,
+        attack_state=state.attack_state,
+        per_round_batches=per_round_batches)
+    n = int(jax.tree.leaves(metrics)[0].shape[0])
+    return TrainState(
+        params=params, opt_state=opt_state, attack_state=attack_state,
+        round_index=state.round_index + jnp.asarray(n, jnp.int32),
+        base_key=state.base_key,
+        history=append_history(state.history, metrics)), metrics
+
+
+def save_train_state(directory: str, state: TrainState, *,
+                     keep: int | None = 3) -> str:
+    """Checkpoint the full state under ``directory/step_<round_index>``."""
+    from repro import checkpoint
+    return checkpoint.save(directory, int(state.round_index), state,
+                           keep=keep, payload=TRAIN_STATE_PAYLOAD)
+
+
+_HISTORY_PATH = re.compile(r"^\.history/\['(.+)'\]$")
+
+
+def _history_example(manifest: dict) -> dict:
+    """Rebuild the history example pytree (keys/shapes/dtypes) from the
+    checkpoint manifest — history length varies per checkpoint, so the
+    caller cannot supply it."""
+    out = {}
+    for entry in manifest["leaves"]:
+        match = _HISTORY_PATH.match(entry["path"])
+        if match:
+            out[match.group(1)] = np.zeros(
+                tuple(entry["shape"]), dtype=entry["dtype"])
+    return out
+
+
+def restore_train_state(directory: str, step: int, example_params,
+                        example_opt_state, *,
+                        schedule: byzantine.AttackSchedule | None = None,
+                        allow_cast: bool = False,
+                        manifest: dict | None = None) -> TrainState:
+    """Dtype-strict restore of a TrainState checkpoint.
+
+    Refuses checkpoints that do not hold a TrainState: legacy
+    (format_version 1) params-only checkpoints AND bare pytrees saved
+    through ``checkpoint.save`` without the ``train_state`` payload tag —
+    restore those with ``repro.checkpoint.restore`` instead.  Pass a
+    pre-read ``manifest`` to skip re-reading it from disk.
+    """
+    from repro import checkpoint
+    if manifest is None:
+        manifest = checkpoint.read_manifest(directory, step)
+    if manifest["format_version"] < 2:
+        raise ValueError(
+            f"checkpoint at {directory!r} step {step} is a legacy "
+            "params-only checkpoint (format_version "
+            f"{manifest['format_version']}); restore params with "
+            "repro.checkpoint.restore instead")
+    if manifest.get("payload") != TRAIN_STATE_PAYLOAD:
+        raise ValueError(
+            f"checkpoint at {directory!r} step {step} is not a TrainState "
+            f"(payload={manifest.get('payload')!r}); it was saved as a "
+            "bare pytree — restore it with repro.checkpoint.restore")
+    example = TrainState(
+        params=example_params, opt_state=example_opt_state,
+        attack_state=schedule.init_state() if schedule is not None else (),
+        round_index=jnp.zeros((), jnp.int32),
+        base_key=jax.random.PRNGKey(0),
+        history=_history_example(manifest))
+    return checkpoint.restore(directory, step, example,
+                              allow_cast=allow_cast)

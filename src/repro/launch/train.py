@@ -26,9 +26,12 @@ import jax
 import jax.numpy as jnp
 
 from repro import checkpoint, optim
+from repro.core import (RobustConfig, aggregators, byzantine,
+                        init_train_state, make_run_rounds,
+                        restore_train_state, save_train_state,
+                        schedule_from_config)
+from repro.core.train_state import advance, history_rows
 from repro.configs import ARCHITECTURES, get_config
-from repro.core import RobustConfig, byzantine, aggregators, \
-    make_run_rounds
 from repro.data.tokens import TokenStream
 from repro.models import model as model_lib
 
@@ -50,6 +53,40 @@ def build_cpu_batch(cfg, stream: TokenStream, step: int, key):
     return batch
 
 
+def resume_train_state(ckpt_dir, params, opt_state, schedule, step_key):
+    """Restore the latest checkpoint in ``ckpt_dir`` into a TrainState.
+
+    Returns ``(state, restored_step)`` — ``(fresh state, 0)`` when there is
+    no checkpoint.  format_version>=2 checkpoints restore the FULL state
+    (params + opt_state + attack_state + round + key + metrics history), so
+    the resumed trajectory is bit-identical to an uninterrupted run.
+    Legacy params-only checkpoints take a one-shot compatibility path:
+    params are restored (with dtype casting, as the old restore did),
+    everything else reinitializes, and a loud warning says so; the next
+    save writes the full state.
+    """
+    state = init_train_state(params, opt_state, step_key, schedule=schedule)
+    step = checkpoint.latest_step(ckpt_dir) if ckpt_dir else None
+    if step is None:
+        return state, 0
+    manifest = checkpoint.read_manifest(ckpt_dir, step)
+    if manifest.get("payload") == "train_state":
+        state = restore_train_state(ckpt_dir, step, params, opt_state,
+                                    schedule=schedule, manifest=manifest)
+        print(f"[train] restored full TrainState (round {step}, "
+              f"schedule {schedule.name!r}) from {ckpt_dir}")
+        return state, step
+    # legacy v1 checkpoints and bare params trees saved via checkpoint.save
+    params = checkpoint.restore(ckpt_dir, step, params, allow_cast=True)
+    print(f"[train] WARNING: legacy params-only checkpoint (step {step}, "
+          f"{ckpt_dir}): optimizer state, adversary state, and metrics "
+          "history were not saved and restart fresh — the resumed "
+          "trajectory will NOT match an uninterrupted run. The next "
+          "checkpoint upgrades to a full TrainState.")
+    return state._replace(params=params,
+                          round_index=jnp.asarray(step, jnp.int32)), step
+
+
 def train_cpu(args) -> dict:
     cfg = get_config(args.arch).reduced()
     m = args.workers
@@ -61,11 +98,12 @@ def train_cpu(args) -> dict:
                       num_batches=args.num_batches)
     opt = optim.adamw(args.lr)
     loss_fn = lambda p, b: model_lib.loss_fn(p, b, cfg)  # noqa: E731
-    schedule = None
     if args.schedule:
         schedule = byzantine.make_schedule(
             args.schedule, num_workers=m, num_byzantine=args.byzantine,
             attack=args.attack)
+    else:
+        schedule = schedule_from_config(rc)
     # Scan-compiled multi-round runner: rounds run in chunks of
     # --scan-chunk, each chunk a single XLA dispatch (the Python loop only
     # handles logging and checkpoint boundaries).
@@ -74,23 +112,16 @@ def train_cpu(args) -> dict:
     key = jax.random.PRNGKey(args.seed)
     params = model_lib.init(key, cfg)
     opt_state = opt.init(params)
-    start = 0
-    if args.ckpt_dir and checkpoint.latest_step(args.ckpt_dir) is not None:
-        start = checkpoint.latest_step(args.ckpt_dir)
-        params = checkpoint.restore(args.ckpt_dir, start, params)
-        print(f"[train] restored step {start} from {args.ckpt_dir}")
-
-    if start > 0 and schedule is not None and schedule.init_state():
-        print("[train] WARNING: stateful attack schedule "
-              f"{schedule.name!r} restarts with fresh adversary state on "
-              "resume (attack state is not checkpointed)")
-
     step_key = jax.random.fold_in(key, 10_000)
+    # NOTE: resume assumes the same --seed/--batch/--seq-len (the data
+    # stream re-derives from args); the step keys themselves are restored
+    # from the checkpoint.
+    state, start = resume_train_state(args.ckpt_dir, params, opt_state,
+                                      schedule, step_key)
+
     chunk = max(1, args.scan_chunk)
     if args.ckpt_dir:
         chunk = min(chunk, args.ckpt_every)
-    history = []
-    attack_state = None
     t0 = time.time()
     i = start
     while i < args.steps:
@@ -100,33 +131,29 @@ def train_cpu(args) -> dict:
         rounds = [build_cpu_batch(cfg, stream, j, jax.random.fold_in(key, j))
                   for j in range(i, i + n)]
         batch = jax.tree.map(lambda *xs: jnp.stack(xs), *rounds)
-        params, opt_state, attack_state, metrics = run(
-            params, opt_state, batch, step_key, start_round=i,
-            attack_state=attack_state, per_round_batches=True)
-        for j in range(n):
-            history.append({k: float(v[j]) for k, v in metrics.items()})
+        state, _ = advance(run, state, batch, per_round_batches=True)
         i += n
         if (i - 1) % args.log_every < n or i == args.steps:
             print(f"[train] step {i - 1:4d} loss_median="
-                  f"{history[-1]['loss_median']:.4f} "
-                  f"gnorm={history[-1]['agg_grad_norm']:.3f} "
+                  f"{float(state.history['loss_median'][-1]):.4f} "
+                  f"gnorm={float(state.history['agg_grad_norm'][-1]):.3f} "
                   f"({time.time() - t0:.1f}s)")
-        if args.ckpt_dir and i % args.ckpt_every == 0:
-            checkpoint.save(args.ckpt_dir, i, params)
+        # boundary saves plus a final save, so the completed run is always
+        # resumable/inspectable even when steps % ckpt_every != 0
+        if args.ckpt_dir and (i % args.ckpt_every == 0 or i == args.steps):
+            save_train_state(args.ckpt_dir, state)
+    history = history_rows(state.history)
     result = {"arch": args.arch, "aggregator": args.aggregator,
               "attack": args.attack, "byzantine": args.byzantine,
-              "schedule": args.schedule or rc_schedule_name(rc),
-              "final_loss": history[-1]["loss_median"],
-              "first_loss": history[0]["loss_median"],
+              "schedule": schedule.name,
+              "resumed_from": start,
+              "final_loss": history[-1]["loss_median"] if history else None,
+              "first_loss": history[0]["loss_median"] if history else None,
               "history": history}
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)
     return result
-
-
-def rc_schedule_name(rc: RobustConfig) -> str:
-    return "rotating" if rc.rotate_byzantine else "static"
 
 
 def train_pod(args):

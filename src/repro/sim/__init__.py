@@ -9,7 +9,12 @@ checked-in golden metric traces for regression testing.
     trace = sim.run_scenario("linreg/gmom/sign_flip/stealth_then_strike")
 """
 
-from repro.sim.engine import build_schedule, run_scenario  # noqa: F401
+from repro.sim.engine import (  # noqa: F401
+    build_schedule,
+    replay_scenario,
+    restore_scenario_state,
+    run_scenario,
+)
 from repro.sim.scenarios import (  # noqa: F401
     Scenario,
     available,

@@ -4,6 +4,15 @@
 model, rolls all rounds into a single ``make_run_rounds`` scan, and returns a
 compact metrics trace (estimation error vs the true θ*, aggregate-gradient
 norm and loss per round) suitable for golden comparison (repro.sim.goldens).
+
+``replay_scenario`` is the checkpointed twin: it runs the same scenario in
+chunks, saving the full ``TrainState`` (params + opt_state + attack_state +
+round + key + metrics history) at every chunk boundary, and — when the
+checkpoint directory already holds state — resumes from the latest
+checkpoint instead of round zero.  Chunked/interrupted/resumed execution is
+bit-identical to the single-scan run, so goldens can be replayed from any
+intermediate checkpoint (``python -m repro.sim.goldens --check`` exercises
+one interrupted resume on every invocation).
 """
 
 from __future__ import annotations
@@ -12,7 +21,10 @@ import jax
 import jax.numpy as jnp
 
 from repro import optim
-from repro.core import RobustConfig, byzantine, make_run_rounds
+from repro.core import (RobustConfig, byzantine, init_train_state,
+                        make_run_rounds, restore_train_state,
+                        save_train_state)
+from repro.core.train_state import TrainState, advance
 from repro.data import regression
 from repro.sim.scenarios import Scenario, get_scenario
 
@@ -24,12 +36,8 @@ def build_schedule(sc: Scenario) -> byzantine.AttackSchedule:
         attack_kwargs=sc.attack_kwargs, **dict(sc.schedule_kwargs))
 
 
-def run_scenario(sc: Scenario | str, *, rounds: int | None = None) -> dict:
-    """Run one scenario end to end; returns a JSON-ready trace dict."""
-    if isinstance(sc, str):
-        sc = get_scenario(sc)
-    rounds = sc.rounds if rounds is None else rounds
-
+def _build_run(sc: Scenario):
+    """Shared setup: (runner, round-zero TrainState, worker_batches, rc)."""
     key = jax.random.PRNGKey(sc.seed)
     ds = regression.generate(key, dim=sc.dim, total_samples=sc.total_samples,
                              num_workers=sc.num_workers,
@@ -46,15 +54,17 @@ def run_scenario(sc: Scenario | str, *, rounds: int | None = None) -> dict:
         del agg_grad
         return {"est_error": jnp.linalg.norm(params - theta_star)}
 
+    schedule = build_schedule(sc)
     run = make_run_rounds(regression.squared_loss, opt, rc,
-                          schedule=build_schedule(sc),
-                          extra_metrics=extra_metrics)
+                          schedule=schedule, extra_metrics=extra_metrics)
     theta0 = jnp.zeros((sc.dim,))
-    theta, _, _, metrics = run(theta0, opt.init(theta0),
-                               regression.worker_batches(ds),
-                               jax.random.fold_in(key, 999),
-                               num_rounds=rounds)
+    state = init_train_state(theta0, opt.init(theta0),
+                             jax.random.fold_in(key, 999),
+                             schedule=schedule)
+    return run, state, regression.worker_batches(ds), rc, schedule
 
+
+def _trace(sc: Scenario, rc: RobustConfig, rounds: int, metrics) -> dict:
     return {
         "scenario": sc.name,
         "aggregator": sc.aggregator,
@@ -75,3 +85,62 @@ def run_scenario(sc: Scenario | str, *, rounds: int | None = None) -> dict:
         "loss_median": [float(v) for v in metrics["loss_median"]],
         "byz_count": [int(v) for v in metrics["byz_count"]],
     }
+
+
+def run_scenario(sc: Scenario | str, *, rounds: int | None = None) -> dict:
+    """Run one scenario end to end; returns a JSON-ready trace dict."""
+    if isinstance(sc, str):
+        sc = get_scenario(sc)
+    rounds = sc.rounds if rounds is None else rounds
+    run, state, batches, rc, _ = _build_run(sc)
+    state, _ = advance(run, state, batches, num_rounds=rounds)
+    return _trace(sc, rc, rounds, state.history)
+
+
+def replay_scenario(sc: Scenario | str, ckpt_dir: str, *,
+                    rounds: int | None = None, ckpt_every: int = 10,
+                    resume: bool = True, keep: int | None = 3) -> dict:
+    """Checkpointed scenario run, resumable from any chunk boundary.
+
+    Saves the full TrainState under ``ckpt_dir`` every ``ckpt_every``
+    rounds.  With ``resume=True`` (default) an existing checkpoint is
+    restored — dtype-strict — and the run continues from its round; the
+    resulting trace is bit-identical to ``run_scenario``'s single scan.
+    Stopping early (smaller ``rounds``) and calling again with the full
+    count is exactly an interrupted-then-resumed run.
+    """
+    from repro import checkpoint
+    if isinstance(sc, str):
+        sc = get_scenario(sc)
+    rounds = sc.rounds if rounds is None else rounds
+    run, state, batches, rc, schedule = _build_run(sc)
+    if resume:
+        step = checkpoint.latest_step(ckpt_dir)
+        if step is not None:
+            state = restore_train_state(ckpt_dir, step, state.params,
+                                        state.opt_state, schedule=schedule)
+    while int(state.round_index) < rounds:
+        n = min(ckpt_every, rounds - int(state.round_index))
+        state, _ = advance(run, state, batches, num_rounds=n)
+        save_train_state(ckpt_dir, state, keep=keep)
+    if int(state.round_index) != rounds or not state.history:
+        raise ValueError(
+            f"checkpoint in {ckpt_dir!r} is at round "
+            f"{int(state.round_index)}, beyond the requested {rounds} — "
+            "refusing to truncate; use a fresh ckpt_dir or resume=False")
+    return _trace(sc, rc, rounds, state.history)
+
+
+def restore_scenario_state(sc: Scenario | str, ckpt_dir: str,
+                           step: int | None = None) -> TrainState:
+    """Load a replay checkpoint (latest by default) for inspection."""
+    from repro import checkpoint
+    if isinstance(sc, str):
+        sc = get_scenario(sc)
+    _, state, _, _, schedule = _build_run(sc)
+    if step is None:
+        step = checkpoint.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir!r}")
+    return restore_train_state(ckpt_dir, step, state.params,
+                               state.opt_state, schedule=schedule)

@@ -19,6 +19,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import tempfile
 
 GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "goldens")
@@ -114,12 +115,37 @@ def record_all(*, update: bool = False) -> dict[str, list[str]]:
     return results
 
 
+# The interrupted-resume probe runs a STATEFUL schedule: its adversary
+# memory (EMA / latch) is exactly what a params-only resume would lose.
+RESUME_CHECK_SCENARIO = "linreg/gmom/sign_flip/stealth_then_strike"
+
+
+def check_resume_replay(name: str = RESUME_CHECK_SCENARIO) -> list[str]:
+    """Interrupt a checkpointed replay mid-run, resume it from the saved
+    TrainState, and compare the stitched trace against the golden.
+
+    Any state the checkpoint fails to carry (optimizer moments, attack
+    state, PRNG key, metrics history) shows up as a trace mismatch.
+    Returns the mismatch list (empty == bit-exact resume).
+    """
+    from repro.sim.engine import replay_scenario
+    from repro.sim.scenarios import get_scenario
+
+    sc = get_scenario(name)
+    half = max(1, sc.rounds // 2)
+    with tempfile.TemporaryDirectory(prefix="golden_resume_") as ckpt_dir:
+        replay_scenario(sc, ckpt_dir, rounds=half, ckpt_every=5)   # "crash"
+        trace = replay_scenario(sc, ckpt_dir, ckpt_every=5)        # resume
+    return compare_traces(trace, load_golden(name))
+
+
 def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--update", action="store_true",
                    help="re-record all golden traces")
     p.add_argument("--check", action="store_true",
-                   help="compare current traces against checked-in goldens")
+                   help="compare current traces against checked-in goldens "
+                        "(also replays one interrupted-resume run)")
     p.add_argument("--list", action="store_true",
                    help="list golden scenarios and exit")
     args = p.parse_args(argv)
@@ -129,6 +155,9 @@ def main(argv=None):
             print(sc.name, "->", golden_path(sc.name))
         return 0
     results = record_all(update=args.update)
+    if args.check:
+        results[f"resume-replay({RESUME_CHECK_SCENARIO})"] = \
+            check_resume_replay()
     bad = {k: v for k, v in results.items() if v}
     for name in results:
         status = "MISMATCH" if name in bad else \

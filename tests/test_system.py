@@ -94,6 +94,43 @@ def test_modality_stubs():
 
 
 @pytest.mark.slow
+def test_train_driver_resume_bit_identical(tmp_path):
+    """End-to-end driver resume: interrupt at a checkpoint boundary, resume
+    from the saved TrainState, and get the exact uninterrupted history —
+    including the stateful stealth_then_strike adversary.  (The fast
+    per-schedule equivalence tests live in test_train_state.py; this one
+    exercises the real LM driver path.)"""
+    import types
+
+    from repro.launch.train import train_cpu
+
+    def args(**kw):
+        base = dict(arch="minitron-4b", steps=6, workers=4, byzantine=1,
+                    num_batches=4, attack="sign_flip",
+                    schedule="stealth_then_strike", scan_chunk=3,
+                    aggregator="gmom", batch=8, seq_len=16, lr=1e-3,
+                    seed=0, log_every=100, ckpt_dir=None, ckpt_every=4,
+                    out=None)
+        base.update(kw)
+        return types.SimpleNamespace(**base)
+
+    straight = train_cpu(args())
+    ckpt = str(tmp_path / "ckpt")
+    # steps=3 is NOT a ckpt_every multiple: the final-state save must still
+    # fire, and the resume restarts from that misaligned boundary
+    train_cpu(args(steps=3, ckpt_dir=ckpt))          # "crash" after step 3
+    resumed = train_cpu(args(ckpt_dir=ckpt))
+    assert resumed["resumed_from"] == 3
+    assert resumed["history"] == straight["history"]
+    assert resumed["first_loss"] == straight["first_loss"]
+    assert resumed["final_loss"] == straight["final_loss"]
+    # resuming an already-complete run: no IndexError, unchanged result
+    done = train_cpu(args(ckpt_dir=ckpt))
+    assert done["resumed_from"] == 6
+    assert done["history"] == straight["history"]
+
+
+@pytest.mark.slow
 def test_train_driver_cli(tmp_path):
     """examples-style end-to-end: the training driver runs and learns."""
     out = tmp_path / "result.json"

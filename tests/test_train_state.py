@@ -1,0 +1,218 @@
+"""Bit-exact adversarial resume.
+
+The paper's guarantee covers ONE uninterrupted trajectory under a possibly
+stateful adversary; these tests pin the contract that makes restarts safe: a
+run interrupted at any checkpoint boundary and resumed from the saved
+``TrainState`` (params + opt_state + attack_state + round + PRNG key +
+metrics history) is bit-identical to the uninterrupted run — for every
+schedule, including the stateful ``stealth_then_strike``.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import pytest
+
+from repro import checkpoint, optim, sim
+from repro.core import (RobustConfig, byzantine, init_train_state,
+                        make_run_rounds, restore_train_state,
+                        save_train_state)
+from repro.core.train_state import advance, history_rows
+from repro.data import regression
+from repro.launch.train import resume_train_state
+from repro.sim import goldens
+
+RESUME_SCHEDULES = ("static", "rotating", "stealth_then_strike")
+
+
+def _setup(schedule_name, *, d=10, N=1600, m=16, q=3, seed=1):
+    ds = regression.generate(jax.random.PRNGKey(seed), dim=d,
+                             total_samples=N, num_workers=m)
+    rc = RobustConfig(num_workers=m, num_byzantine=q, num_batches=8,
+                      attack="sign_flip", aggregator="gmom")
+    schedule = byzantine.make_schedule(schedule_name, num_workers=m,
+                                       num_byzantine=q, attack="sign_flip")
+    # adamw, not the paper's sgd: its (mu, nu, step) moments are exactly the
+    # state a params-only resume silently dropped.
+    opt = optim.adamw(1e-2)
+    run = make_run_rounds(regression.squared_loss, opt, rc,
+                          schedule=schedule)
+    theta0 = jnp.zeros((d,))
+    state0 = init_train_state(theta0, opt.init(theta0),
+                              jax.random.PRNGKey(7), schedule=schedule)
+    return run, state0, regression.worker_batches(ds), opt, schedule
+
+
+def _assert_tree_equal(a, b, msg=""):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb, f"{msg}: structure {ta} vs {tb}"
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+@pytest.mark.parametrize("schedule_name", RESUME_SCHEDULES)
+def test_resume_is_bit_identical(schedule_name, tmp_path):
+    """save-at-k / restore / continue == straight run: params, opt moments,
+    attack state, round counter, and the full metrics trace."""
+    run, state0, batches, opt, schedule = _setup(schedule_name)
+    rounds, k = 20, 8
+
+    straight, _ = advance(run, state0, batches, num_rounds=rounds)
+
+    mid, _ = advance(run, state0, batches, num_rounds=k)
+    save_train_state(str(tmp_path), mid)
+    del mid                                   # the "crash"
+
+    theta0 = jnp.zeros_like(state0.params)
+    restored = restore_train_state(str(tmp_path), k, theta0,
+                                   opt.init(theta0), schedule=schedule)
+    assert int(restored.round_index) == k
+    resumed, _ = advance(run, restored, batches, num_rounds=rounds - k)
+
+    _assert_tree_equal(resumed.params, straight.params, "params")
+    _assert_tree_equal(resumed.opt_state, straight.opt_state, "opt_state")
+    _assert_tree_equal(resumed.attack_state, straight.attack_state,
+                       "attack_state")
+    _assert_tree_equal(resumed.base_key, straight.base_key, "base_key")
+    assert int(resumed.round_index) == rounds
+    assert history_rows(resumed.history) == history_rows(straight.history)
+
+
+@pytest.mark.parametrize("schedule_name", byzantine.available_schedules())
+def test_every_schedule_init_state_roundtrips(schedule_name, tmp_path):
+    """AttackSchedule.init_state() pytrees are checkpointable: fixed
+    structure, array leaves only, byte-stable through save/restore."""
+    schedule = byzantine.make_schedule(schedule_name, num_workers=8,
+                                       num_byzantine=2, attack="sign_flip")
+    astate = schedule.init_state()
+    for leaf in jax.tree.leaves(astate):
+        assert hasattr(leaf, "dtype") and hasattr(leaf, "shape"), \
+            f"{schedule_name}: non-array attack-state leaf {leaf!r}"
+    checkpoint.save(str(tmp_path), 0, {"attack_state": astate})
+    restored = checkpoint.restore(str(tmp_path), 0,
+                                  {"attack_state": schedule.init_state()})
+    _assert_tree_equal(restored["attack_state"], astate, schedule_name)
+
+    # apply() must preserve the structure/dtypes (the checkpoint contract)
+    stacked = {"w": jnp.ones((8, 4))}
+    _, _, new_state = schedule.apply(stacked, jax.random.PRNGKey(0),
+                                     jnp.asarray(0), astate)
+    assert jax.tree_util.tree_structure(new_state) == \
+        jax.tree_util.tree_structure(astate)
+    for a, b in zip(jax.tree.leaves(new_state), jax.tree.leaves(astate)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+
+
+def test_restore_rejects_dtype_mismatch(tmp_path):
+    checkpoint.save(str(tmp_path), 0, {"w": jnp.ones((3,), jnp.float32)})
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        checkpoint.restore(str(tmp_path), 0,
+                           {"w": jnp.zeros((3,), jnp.bfloat16)})
+    cast = checkpoint.restore(str(tmp_path), 0,
+                              {"w": jnp.zeros((3,), jnp.bfloat16)},
+                              allow_cast=True)
+    assert cast["w"].dtype == jnp.bfloat16
+
+
+def _make_legacy(directory, step, params):
+    """A pre-versioning params-only checkpoint (no format_version key)."""
+    checkpoint.save(directory, step, params)
+    manifest_path = os.path.join(directory, f"step_{step:08d}",
+                                 "manifest.msgpack")
+    with open(manifest_path, "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    manifest.pop("format_version")
+    with open(manifest_path, "wb") as f:
+        f.write(msgpack.packb(manifest))
+
+
+def test_manifest_format_version(tmp_path):
+    checkpoint.save(str(tmp_path), 3, {"w": jnp.ones((2,))})
+    assert checkpoint.read_manifest(str(tmp_path), 3)["format_version"] \
+        == checkpoint.FORMAT_VERSION
+    _make_legacy(str(tmp_path / "legacy"), 3, {"w": jnp.ones((2,))})
+    assert checkpoint.read_manifest(str(tmp_path / "legacy"),
+                                    3)["format_version"] == 1
+    with pytest.raises(ValueError, match="legacy"):
+        restore_train_state(str(tmp_path / "legacy"), 3, {"w": jnp.zeros(2)},
+                            ())
+    # a bare params tree saved through the current API is v2 but NOT a
+    # TrainState — restore_train_state must refuse rather than KeyError
+    with pytest.raises(ValueError, match="not a TrainState"):
+        restore_train_state(str(tmp_path), 3, {"w": jnp.zeros(2)}, ())
+
+
+def test_driver_resume_full_and_legacy(tmp_path, capsys):
+    """launch.train.resume_train_state: full checkpoints restore the whole
+    state; legacy params-only checkpoints restore params with a loud
+    warning and fresh optimizer/adversary state."""
+    opt = optim.adamw(1e-2)
+    schedule = byzantine.make_schedule("stealth_then_strike", num_workers=4,
+                                       num_byzantine=1, attack="sign_flip")
+    params = {"w": jnp.arange(4, dtype=jnp.float32)}
+    zeros = {"w": jnp.zeros((4,), jnp.float32)}
+    key = jax.random.PRNGKey(3)
+
+    # no checkpoint dir -> fresh state at round 0
+    state, start = resume_train_state(None, params, opt.init(params),
+                                      schedule, key)
+    assert start == 0 and not state.history
+
+    full_dir = str(tmp_path / "full")
+    state = state._replace(
+        round_index=jnp.asarray(5, jnp.int32),
+        attack_state={"init_norm": jnp.asarray(2.5, jnp.float32),
+                      "ema_norm": jnp.asarray(0.5, jnp.float32),
+                      "struck": jnp.asarray(True)},
+        history={"loss_median": np.arange(5, dtype=np.float32)})
+    save_train_state(full_dir, state)
+    restored, start = resume_train_state(full_dir, zeros, opt.init(zeros),
+                                         schedule, jax.random.PRNGKey(0))
+    assert start == 5
+    _assert_tree_equal(restored.params, params)
+    _assert_tree_equal(restored.attack_state, state.attack_state)
+    _assert_tree_equal(restored.base_key, key)
+    assert history_rows(restored.history) == history_rows(state.history)
+    assert "restored full TrainState" in capsys.readouterr().out
+
+    legacy_dir = str(tmp_path / "legacy")
+    _make_legacy(legacy_dir, 7, params)
+    restored, start = resume_train_state(legacy_dir, zeros, opt.init(zeros),
+                                         schedule, key)
+    out = capsys.readouterr().out
+    assert "legacy params-only" in out
+    assert "restarts with fresh adversary state" not in out
+    assert start == 7 and int(restored.round_index) == 7
+    _assert_tree_equal(restored.params, params)
+    _assert_tree_equal(restored.opt_state, opt.init(zeros))   # fresh
+    _assert_tree_equal(restored.attack_state, schedule.init_state())
+
+    # a bare params tree saved with the CURRENT checkpoint.save (v2, no
+    # train_state payload tag) takes the same compat path, not a crash
+    bare_dir = str(tmp_path / "bare")
+    checkpoint.save(bare_dir, 9, params)
+    restored, start = resume_train_state(bare_dir, zeros, opt.init(zeros),
+                                         schedule, key)
+    assert "legacy params-only" in capsys.readouterr().out
+    assert start == 9
+    _assert_tree_equal(restored.params, params)
+
+
+def test_replay_scenario_resume_matches_single_scan(tmp_path):
+    """Engine-level contract: an interrupted-then-resumed checkpointed
+    replay serializes to the same bytes as the uninterrupted scan."""
+    name = "linreg/gmom/sign_flip/stealth_then_strike"
+    straight = goldens.trace_bytes(sim.run_scenario(name, rounds=8))
+    d = str(tmp_path / "ckpt")
+    sim.replay_scenario(name, d, rounds=4, ckpt_every=3)     # "crash" at 4
+    assert checkpoint.latest_step(d) == 4
+    trace = sim.replay_scenario(name, d, rounds=8, ckpt_every=3)
+    assert goldens.trace_bytes(trace) == straight
+    # replaying an already-complete checkpoint just returns the trace
+    again = sim.replay_scenario(name, d, rounds=8, ckpt_every=3)
+    assert goldens.trace_bytes(again) == straight
