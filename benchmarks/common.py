@@ -30,6 +30,57 @@ def save_json(name: str, payload):
     return path
 
 
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def save_bench(name: str, payload: dict) -> str:
+    """Write a CHECKED-IN benchmark record ``benchmarks/BENCH_<name>.json``.
+
+    Unlike ``save_json`` (scratch output under benchmarks/results/, not
+    committed), BENCH files are committed with the PR that produced them so
+    reviewers and later sessions can read the performance trajectory from
+    git history.  See docs/BENCHMARKS.md for the workflow and field
+    conventions.  Metadata records the backend the numbers were taken on —
+    a fused-kernel speedup measured on CPU says nothing about TPU and
+    vice versa.
+    """
+    record = {
+        "bench": name,
+        "recorded_unix": int(time.time()),
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "cpu_count": os.cpu_count(),
+        **payload,
+    }
+    path = os.path.join(BENCH_DIR, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, sort_keys=False)
+        f.write("\n")
+    return path
+
+
+def ab_time(fn_a, fn_b, *args, iters: int = 30, warmup: int = 5):
+    """Interleaved A/B wall-time (median us per call for each function).
+
+    Alternating the two measurements inside one loop cancels machine-load
+    drift that back-to-back loops pick up — required for honest fused vs
+    unfused comparisons on shared CI hosts.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a(*args))
+        jax.block_until_ready(fn_b(*args))
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(*args))
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(*args))
+        tb.append(time.perf_counter() - t0)
+    med = lambda ts: float(sorted(ts)[len(ts) // 2] * 1e6)  # noqa: E731
+    return med(ta), med(tb)
+
+
 def run_linreg(*, dim, total_samples, num_workers, num_byzantine,
                num_batches, attack, aggregator, rounds, seed=0,
                rotate=True, trim_multiplier=3.0, eta=None):

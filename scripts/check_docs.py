@@ -1,0 +1,107 @@
+#!/usr/bin/env python
+"""Keep the paper↔code documentation honest as the registries grow.
+
+Fails (non-zero exit / raised AssertionError from pytest) when:
+
+* a registered aggregator, attack, or schedule is missing from
+  docs/PAPER_MAP.md (every registry name must appear as `name`);
+* a registry entry has an empty description (the registry IS the
+  documentation surface — see aggregators.describe());
+* the README aggregator table is missing a registered aggregator;
+* the checked-in benchmarks/BENCH_round_kernel.json is absent, unparsable,
+  or its recorded headline claim (fused beats unfused at the paper-scale
+  configuration on the recorded backend) does not hold.
+
+Run directly::
+
+    PYTHONPATH=src python scripts/check_docs.py
+
+or via tier-1 (tests/test_docs_map.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _read(relpath: str) -> str:
+    with open(os.path.join(REPO, relpath)) as f:
+        return f.read()
+
+
+def collect_problems() -> list[str]:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.core import aggregators, byzantine
+
+    problems: list[str] = []
+    paper_map = _read(os.path.join("docs", "PAPER_MAP.md"))
+    readme = _read("README.md")
+
+    registries = {
+        "aggregator": aggregators.describe(),
+        "attack": byzantine.describe(),
+        "schedule": byzantine.describe_schedules(),
+    }
+    for kind, rows in registries.items():
+        for name, description in rows:
+            if f"`{name}`" not in paper_map:
+                problems.append(
+                    f"{kind} {name!r} is registered but missing from "
+                    "docs/PAPER_MAP.md — add its row")
+            if not description.strip():
+                problems.append(
+                    f"{kind} {name!r} has an empty registry description")
+
+    # The README table must match the registry row for row — names AND
+    # descriptions (regenerate with aggregators.describe_markdown()).
+    for row in aggregators.describe_markdown().splitlines():
+        if row not in readme:
+            problems.append(
+                "README aggregator table drifted from the registry; "
+                f"missing row: {row!r} "
+                "(regenerate with repro.core.aggregators.describe_markdown())")
+
+    bench_path = os.path.join("benchmarks", "BENCH_round_kernel.json")
+    if not os.path.exists(os.path.join(REPO, bench_path)):
+        problems.append(f"{bench_path} is not checked in "
+                        "(run python -m benchmarks.run --only kernel_bench)")
+    else:
+        try:
+            rec = json.loads(_read(bench_path))
+        except json.JSONDecodeError as e:
+            problems.append(f"{bench_path} does not parse: {e}")
+        else:
+            for field in ("backend", "paper_scale", "summary"):
+                if field not in rec:
+                    problems.append(f"{bench_path} missing field {field!r}")
+            summary = rec.get("summary", {})
+            if not summary.get("fused_beats_unfused_at_paper_scale", False):
+                problems.append(
+                    f"{bench_path}: recorded summary does not claim the "
+                    "paper-scale fused win — re-measure or re-record")
+            for row in rec.get("paper_scale", []):
+                if row.get("speedup", 0.0) <= 1.0:
+                    problems.append(
+                        f"{bench_path}: paper_scale row {row} has "
+                        "speedup <= 1")
+    return problems
+
+
+def main() -> int:
+    problems = collect_problems()
+    for p in problems:
+        print(f"check_docs: {p}")
+    if problems:
+        print(f"check_docs: FAILED ({len(problems)} problem(s))")
+        return 1
+    print("check_docs: ok — registries, PAPER_MAP, README table, and "
+          "BENCH_round_kernel.json are consistent")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,6 +16,25 @@ well-known robust baselines used for the comparison benchmarks:
                           related work; selects the worker whose gradient has
                           the smallest sum of distances to its m-q-2 closest.
 * ``norm_clip_mean``    — mean of norm-clipped gradients (practical baseline)
+
+Every ``register(...)`` call carries a one-line description; ``describe()``
+renders the registry as a markdown table (the one in README.md), and
+``scripts/check_docs.py`` fails CI when a registered name is missing from
+``docs/PAPER_MAP.md`` or has an empty description.
+
+``gmom`` dispatches its hot path through ``round_backend``:
+
+* ``"reference"``       — the original jnp pipeline (batch means -> Remark-2
+                          trim -> pytree Weiszfeld).  Bit-stable: the golden
+                          scenario traces are recorded on this path.
+* ``"fused"``           — the Pallas round kernel
+                          (``repro.kernels.geomed.round``): one HBM read of
+                          the stacked gradients; means, trimming, and the
+                          whole Weiszfeld loop stay VMEM-resident.
+* ``"fused_interpret"`` — the same kernel in interpret mode (CPU tests).
+* ``"auto"`` (default)  — ``fused`` on TPU backends, ``reference`` elsewhere;
+                          also falls back to ``reference`` when the (k, d)
+                          block exceeds the kernel's VMEM budget.
 """
 
 from __future__ import annotations
@@ -26,6 +45,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 from repro.core.geometric_median import (
@@ -64,6 +84,19 @@ def available() -> list[str]:
     return sorted(_REGISTRY)
 
 
+def describe() -> list[tuple[str, str]]:
+    """(name, description) rows for every registered aggregator, sorted."""
+    return [(n, _REGISTRY[n].description) for n in available()]
+
+
+def describe_markdown() -> str:
+    """The registry as a markdown table — the source of the README table
+    (kept honest by scripts/check_docs.py)."""
+    rows = ["| aggregator | description |", "|---|---|"]
+    rows += [f"| `{n}` | {d} |" for n, d in describe()]
+    return "\n".join(rows)
+
+
 # ---------------------------------------------------------------------------
 # helpers
 
@@ -84,9 +117,27 @@ def bottom_k_mask(scores: jax.Array, k: int) -> jax.Array:
 
 
 def _apply_grouping(stacked, grouping: Grouping):
-    """Permute + reshape worker axis m -> (k, b) and mean over b."""
+    """Permute + reshape worker axis m -> (k, b) and mean over b.
+
+    Uneven groupings (k does not divide m — beyond the paper's b = m/k
+    assumption) have no reshape view; their means are a single contraction
+    with the {0,1} membership matrix, computed in f32."""
+    k = grouping.num_batches
+    if not grouping.is_even:
+        from repro.core.grouping import assignment_matrix
+        s = jnp.asarray(assignment_matrix(grouping))
+        sizes = jnp.asarray(grouping.batch_sizes, jnp.float32)
+
+        def leaf_uneven(g):
+            m = g.shape[0]
+            flat = g.reshape(m, -1).astype(jnp.float32)
+            means = (s @ flat) / sizes[:, None]
+            return means.astype(g.dtype).reshape((k,) + g.shape[1:])
+
+        return jax.tree.map(leaf_uneven, stacked)
+
     perm = jnp.asarray(grouping.perm)
-    k, b = grouping.num_batches, grouping.batch_size
+    b = grouping.batch_size
 
     def leaf(g):
         g = jnp.take(g, jnp.argsort(perm), axis=0)  # order workers by slot
@@ -107,25 +158,84 @@ def batch_means(stacked_grads, num_batches: int, *,
 # ---------------------------------------------------------------------------
 # aggregators
 
-@register("mean", "plain average — the paper's Algorithm 1 (classical BGD)")
+@register("mean", "plain average — the paper's Algorithm 1 (classical BGD), "
+          "breakdown point 0: one Byzantine worker moves it arbitrarily")
 def mean_aggregator(stacked_grads, **_kw):
+    """Paper Algorithm 1: simple averaging — the failure-free baseline,
+    broken by a single Byzantine report (§1.3)."""
     return jax.tree.map(lambda g: jnp.mean(g, axis=0), stacked_grads)
 
 
-@register("gmom", "geometric median of means — the paper's Algorithm 2")
+def resolve_round_backend(round_backend: str | None, *, num_batches: int,
+                          total_dim: int | None = None,
+                          num_workers: int = 0) -> str:
+    """Map the ``round_backend`` switch to a concrete path.
+
+    ``auto``/None picks the fused Pallas kernel on TPU backends and the
+    reference jnp pipeline elsewhere.  When ``total_dim`` is known, any
+    fused selection (auto or explicit) falls back to ``reference`` if the
+    kernel's VMEM-resident footprint (``round.round_resident_bytes`` — the
+    same formula the kernel's own guard uses) would blow its budget —
+    silently for auto, with a warning for an explicit request."""
+    if round_backend not in (None, "auto", "reference", "fused",
+                             "fused_interpret"):
+        raise ValueError(f"unknown round_backend {round_backend!r}")
+    explicit = round_backend not in (None, "auto")
+    if not explicit:
+        import jax as _jax
+        round_backend = ("fused" if _jax.default_backend() == "tpu"
+                         else "reference")
+    if round_backend != "reference" and total_dim is not None:
+        from repro.kernels.geomed import round as round_kernel
+        if not round_kernel.fits_vmem(num_workers, num_batches, total_dim):
+            if explicit:
+                import warnings
+                warnings.warn(
+                    f"round_backend={round_backend!r} requested but the "
+                    f"(k={num_batches}, d={total_dim}) block exceeds the "
+                    "fused kernel's VMEM budget; using 'reference'",
+                    stacklevel=3)
+            return "reference"
+    return round_backend
+
+
+def _total_dim(stacked) -> int:
+    return sum(int(np.prod(l.shape[1:], dtype=np.int64)) if l.ndim > 1 else 1
+               for l in jax.tree.leaves(stacked))
+
+
+@register("gmom", "geometric median of means — the paper's Algorithm 2 "
+          "(fused Pallas round kernel on TPU, jnp reference elsewhere)")
 def gmom_aggregator(stacked_grads, *, num_batches: int | None = None,
                     num_byzantine: int = 0, epsilon: float = 0.1,
                     grouping_scheme: str = "contiguous",
                     trim_multiplier: float | None = 3.0,
-                    max_iters: int = 64, tol: float = 1e-8, **_kw):
+                    max_iters: int = 64, tol: float = 1e-8,
+                    round_backend: str | None = "auto", **_kw):
     """Paper Algorithm 2 step 4: A_k(g) = med{batch means}, with the
-    Remark-2 norm trimming applied as zero Weiszfeld weights."""
+    Remark-2 norm trimming applied as zero Weiszfeld weights.
+
+    ``round_backend`` selects the hot-path lowering (see module docstring):
+    the golden-trace-stable jnp ``reference`` pipeline, or the ``fused``
+    Pallas round kernel that keeps means+trim+Weiszfeld VMEM-resident.
+    """
     m = _num_workers(stacked_grads)
     if num_batches is None:
         from repro.core.grouping import choose_num_batches
         num_batches = choose_num_batches(m, num_byzantine, epsilon=epsilon)
     if num_batches == 1:    # GMoM reduces to the mean (paper §2.1)
         return mean_aggregator(stacked_grads)
+    backend = resolve_round_backend(round_backend, num_batches=num_batches,
+                                    total_dim=_total_dim(stacked_grads),
+                                    num_workers=m)
+    if backend != "reference":
+        from repro.kernels.geomed import round as round_kernel
+        grouping = make_grouping(m, num_batches, scheme=grouping_scheme)
+        return round_kernel.round_aggregate_pytree(
+            stacked_grads, grouping, trim_multiplier=trim_multiplier,
+            max_iters=max_iters, tol=tol,
+            use_pallas=(backend == "fused"),
+            interpret=(backend == "fused_interpret"))
     means = batch_means(stacked_grads, num_batches, scheme=grouping_scheme)
     weights = None
     if trim_multiplier is not None:
@@ -135,21 +245,32 @@ def gmom_aggregator(stacked_grads, *, num_batches: int | None = None,
                                       max_iters=max_iters, tol=tol)
 
 
-@register("geomed", "geometric median of the raw worker gradients (k = m)")
+@register("geomed", "geometric median of the raw worker gradients — the "
+          "k = m special case of GMoM (paper §2.1)")
 def geomed_aggregator(stacked_grads, *, max_iters: int = 64,
                       tol: float = 1e-8, **_kw):
+    """GMoM with every worker its own batch (k = m, paper §2.1): maximal
+    robustness per report, no variance reduction from batching."""
     return geometric_median_pytree(stacked_grads, max_iters=max_iters,
                                       tol=tol)
 
 
-@register("coordinate_median", "coordinate-wise median baseline")
+@register("coordinate_median", "coordinate-wise median — the marginal-"
+          "median baseline of Yin et al. '18")
 def coordinate_median_aggregator(stacked_grads, **_kw):
+    """Per-coordinate median across workers (the marginal median): robust
+    per coordinate, but ignores cross-coordinate structure — the
+    comparison point for the paper's *geometric* (joint) median."""
     return jax.tree.map(lambda g: jnp.median(g, axis=0), stacked_grads)
 
 
-@register("trimmed_mean", "coordinate-wise beta-trimmed mean baseline")
+@register("trimmed_mean", "coordinate-wise beta-trimmed mean "
+          "[Yin et al. '18] — related-work baseline")
 def trimmed_mean_aggregator(stacked_grads, *, trim_fraction: float = 0.1,
                             num_byzantine: int | None = None, **_kw):
+    """Coordinate-wise mean after discarding the t largest and t smallest
+    entries per coordinate (t = num_byzantine, else trim_fraction x m) —
+    Yin et al. 2018's order-optimal rule under its own q < m/2 condition."""
     m = _num_workers(stacked_grads)
     t = num_byzantine if num_byzantine is not None else int(trim_fraction * m)
     t = min(t, (m - 1) // 2)
@@ -163,8 +284,14 @@ def trimmed_mean_aggregator(stacked_grads, *, trim_fraction: float = 0.1,
     return jax.tree.map(leaf, stacked_grads)
 
 
-@register("krum", "Krum selection rule [BMGS17] — related-work baseline")
+@register("krum", "Krum selection rule [BMGS17] — the paper's closest "
+          "related work; picks one whole gradient by distance score")
 def krum_aggregator(stacked_grads, *, num_byzantine: int = 0, **_kw):
+    """Krum (Blanchard et al. '17): return the single worker gradient with
+    the smallest sum of squared distances to its m - q - 2 nearest
+    neighbours.  Selects a *received* gradient verbatim rather than
+    averaging — robust, but discards the variance reduction of honest
+    averaging the paper's GMoM keeps."""
     m = _num_workers(stacked_grads)
     # pairwise squared distances accumulated leaf-by-leaf (never flattens).
     d2 = jnp.zeros((m, m), jnp.float32)
@@ -181,9 +308,23 @@ def krum_aggregator(stacked_grads, *, num_byzantine: int = 0, **_kw):
     return jax.tree.map(lambda g: jnp.take(g, winner, axis=0), stacked_grads)
 
 
-@register("norm_clip_mean", "mean of gradients clipped to the median norm")
+@register("norm_clip_mean",
+          "mean of gradients clipped to the median norm — KNOWN-UNSOUND "
+          "vs small-norm attacks (alie, norm_stealth, inner_product)")
 def norm_clip_mean_aggregator(stacked_grads, *, clip_multiplier: float = 1.0,
                               **_kw):
+    """Mean of gradients clipped to ``clip_multiplier x median`` norm.
+
+    .. warning:: **known-unsound vs. alie / norm_stealth.**  Clipping only
+       bounds each report's *norm*; a coordinated small-norm attack (ALIE's
+       mean - z.std report, norm_stealth hiding under the clip threshold,
+       small-scale inner_product) passes through unclipped and biases the
+       mean by O(q/m) per round — there is NO bounded-deviation guarantee.
+       The defense matrix (tests/test_defense_matrix.py) deliberately
+       excludes it from the ROBUST set; implementing the paper §6 combined
+       selection rules against these adaptive attacks is an open ROADMAP
+       item ("Defense gap found by the matrix tests").
+    """
     norms = batch_mean_norms(stacked_grads)            # (m,)
     tau = clip_multiplier * jnp.median(norms)
     scale = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-12))
@@ -208,6 +349,10 @@ def norm_clip_mean_aggregator(stacked_grads, *, clip_multiplier: float = 1.0,
           "server's random bits — fails vs the paper's omniscient model)")
 def random_select_aggregator(stacked_grads, *, key=None,
                              subset_fraction: float = 0.5, **_kw):
+    """Average a uniformly random subset (paper §6, rule 1).  Only defends
+    the RELAXED adversary: the paper's omniscient model sees the server's
+    random bits (our attacks receive the same ``key``), adapts, and wins —
+    the §6 caveat the selection_rules benchmark demonstrates."""
     m = _num_workers(stacked_grads)
     n_sel = max(int(subset_fraction * m), 1)
     if key is None:
@@ -224,9 +369,21 @@ def random_select_aggregator(stacked_grads, *, key=None,
 
 @register("norm_select",
           "paper §6 rule 2: average the gradients with the smallest l2 "
-          "norms (beats large-norm attacks; loses to small-norm "
-          "inner-product manipulation — see benchmarks/selection_rules)")
+          "norms — KNOWN-UNSOUND vs small-norm attacks (alie, "
+          "norm_stealth); see benchmarks/selection_rules")
 def norm_select_aggregator(stacked_grads, *, num_byzantine: int = 0, **_kw):
+    """Average the ``m - q`` smallest-norm gradients (paper §6, rule 2).
+
+    .. warning:: **known-unsound vs. alie / norm_stealth.**  Selecting by
+       small norm beats the classic large-norm attacks, but an adversary
+       that *minimizes* its norm (ALIE, norm_stealth, small-scale
+       inner_product) is preferentially SELECTED by this rule — its crafted
+       rows rank below the honest ones and survive into the average, so the
+       bounded-deviation property fails exactly on the attacks it is
+       documented against in the defense matrix.  Excluded from ROBUST in
+       tests/test_defense_matrix.py; the full fix (paper §6 combined
+       selection rules) is a separate ROADMAP item.
+    """
     m = _num_workers(stacked_grads)
     keep = max(m - max(num_byzantine, 1), 1)
     norms = batch_mean_norms(stacked_grads)            # (m,)
@@ -245,10 +402,15 @@ def norm_select_aggregator(stacked_grads, *, num_byzantine: int = 0, **_kw):
 # per-leaf ("blockwise") GMoM — the beyond-paper perf variant (DESIGN.md §3)
 
 @register("gmom_per_leaf",
-          "GMoM applied independently per parameter tensor (beyond-paper)")
+          "GMoM applied independently per parameter tensor — beyond-paper "
+          "blockwise variant (DESIGN.md §3)")
 def gmom_per_leaf_aggregator(stacked_grads, *, num_batches: int | None = None,
                              num_byzantine: int = 0, epsilon: float = 0.1,
                              max_iters: int = 64, tol: float = 1e-8, **_kw):
+    """Blockwise GMoM: one geometric median per parameter tensor instead of
+    one in the concatenated R^d.  Cheaper to shard (medians run leaf-local)
+    at the cost of the paper's joint-geometry guarantee holding only
+    per block."""
     m = _num_workers(stacked_grads)
     if num_batches is None:
         from repro.core.grouping import choose_num_batches

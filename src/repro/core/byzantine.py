@@ -297,11 +297,13 @@ class AttackSchedule:
 
 
 _SCHEDULE_REGISTRY: dict[str, Callable[..., AttackSchedule]] = {}
+_SCHEDULE_DESCRIPTIONS: dict[str, str] = {}
 
 
-def register_schedule(name: str):
+def register_schedule(name: str, description: str = ""):
     def deco(builder):
         _SCHEDULE_REGISTRY[name] = builder
+        _SCHEDULE_DESCRIPTIONS[name] = description
         return builder
     return deco
 
@@ -321,10 +323,20 @@ def available_schedules() -> list[str]:
     return sorted(_SCHEDULE_REGISTRY)
 
 
+def describe() -> list[tuple[str, str]]:
+    """(name, description) rows for every registered attack, sorted."""
+    return [(n, _REGISTRY[n].description) for n in available()]
+
+
+def describe_schedules() -> list[tuple[str, str]]:
+    """(name, description) rows for every registered schedule, sorted."""
+    return [(n, _SCHEDULE_DESCRIPTIONS[n]) for n in available_schedules()]
+
+
 def _stateless(): return ()
 
 
-@register_schedule("static")
+@register_schedule("static", "fixed Byzantine set (first q workers), same attack every round")
 def static_schedule(*, num_workers, num_byzantine, attack="sign_flip",
                     attack_kwargs=(), **_kw) -> AttackSchedule:
     """Fixed Byzantine set (first q workers), same attack every round."""
@@ -340,7 +352,7 @@ def static_schedule(*, num_workers, num_byzantine, attack="sign_flip",
                           _stateless, apply)
 
 
-@register_schedule("rotating")
+@register_schedule("rotating", "fresh random q-subset each round — the paper's time-varying hard case")
 def rotating_schedule(*, num_workers, num_byzantine, attack="sign_flip",
                       attack_kwargs=(), **_kw) -> AttackSchedule:
     """Fresh uniformly-random q-subset every round (B_t changes per round —
@@ -356,7 +368,7 @@ def rotating_schedule(*, num_workers, num_byzantine, attack="sign_flip",
                           _stateless, apply)
 
 
-@register_schedule("ramp_up")
+@register_schedule("ramp_up", "corruption grows 0 -> q over ramp_rounds (slow-burn infiltration)")
 def ramp_up_schedule(*, num_workers, num_byzantine, attack="sign_flip",
                      attack_kwargs=(), ramp_rounds: int = 20,
                      **_kw) -> AttackSchedule:
@@ -375,7 +387,7 @@ def ramp_up_schedule(*, num_workers, num_byzantine, attack="sign_flip",
                           _stateless, apply)
 
 
-@register_schedule("coordinated_switch")
+@register_schedule("coordinated_switch", "all colluders switch from attack to attack2 at switch_round")
 def coordinated_switch_schedule(*, num_workers, num_byzantine,
                                 attack="sign_flip",
                                 attack_b="inner_product",
@@ -401,7 +413,7 @@ def coordinated_switch_schedule(*, num_workers, num_byzantine,
                           _stateless, apply)
 
 
-@register_schedule("stealth_then_strike")
+@register_schedule("stealth_then_strike", "stateful: honest until the aggregate gradient norm decays below trigger, then latches into attacking")
 def stealth_then_strike_schedule(*, num_workers, num_byzantine,
                                  attack="sign_flip", attack_kwargs=(),
                                  strike_fraction: float = 0.25,

@@ -47,6 +47,10 @@ class RobustConfig:
     gmom_max_iters: int = 32
     gmom_tol: float = 1e-7
     grouping_scheme: str = "contiguous"
+    # gmom hot-path lowering: "auto" (fused Pallas round kernel on TPU,
+    # jnp reference elsewhere), "fused", "fused_interpret", or "reference".
+    # The golden traces are recorded on the reference path.
+    round_backend: str = "auto"
 
     def resolved_num_batches(self) -> int:
         if self.num_batches is not None:
@@ -86,7 +90,8 @@ def aggregate_reported(reported_grads, cfg: RobustConfig, *, key):
                       max_iters=cfg.gmom_max_iters, tol=cfg.gmom_tol)
         if cfg.aggregator == "gmom":
             kwargs.update(trim_multiplier=cfg.trim_multiplier,
-                          grouping_scheme=cfg.grouping_scheme)
+                          grouping_scheme=cfg.grouping_scheme,
+                          round_backend=cfg.round_backend)
     elif cfg.aggregator in ("krum", "trimmed_mean", "norm_select"):
         kwargs.update(num_byzantine=cfg.num_byzantine)
     elif cfg.aggregator == "random_select":
@@ -171,6 +176,13 @@ def make_run_rounds(loss_fn: Callable, optimizer, cfg: RobustConfig, *,
     Round ``t`` uses ``jax.random.fold_in(key, t)`` as its step key, so the
     scan reproduces a Python loop over ``make_robust_train_step`` driven with
     the same per-round keys, step for step.
+
+    With ``cfg.aggregator == "gmom"`` the per-round hot path (batch means ->
+    Remark-2 trim -> Weiszfeld) dispatches through ``cfg.round_backend``: on
+    TPU it is the fused Pallas round kernel
+    (``repro.kernels.geomed.round.round_aggregate_kernel``) that keeps the
+    whole pipeline VMEM-resident inside the scan body; elsewhere the
+    golden-trace-stable jnp reference pipeline runs.
 
     * fixed-batch mode (default): ``worker_batches`` is the paper's full
       local data S_j, reused every round (Algorithm 1/2 exactly);
@@ -268,6 +280,15 @@ def make_shardmap_aggregate(cfg: RobustConfig, mesh, worker_axes=("data",)):
     from jax.experimental.shard_map import shard_map  # noqa: F401
     k = cfg.resolved_num_batches()
     m = cfg.num_workers
+    if m % k != 0:
+        # The one-hot psum below assumes the even contiguous partition
+        # (batch_id = idx // b with a single b); an uneven grouping would
+        # silently drop workers idx >= k*b and mis-scale every mean.
+        # Uneven k (paper's m=50, k=11) is supported by the gmom/fused
+        # round path, not by this hand-scheduled collective yet.
+        raise ValueError(
+            f"make_shardmap_aggregate requires k | m (got m={m}, k={k}); "
+            "use the gmom aggregator path for uneven groupings")
     b = m // k
 
     def agg_local(my_grad):

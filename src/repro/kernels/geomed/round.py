@@ -1,0 +1,516 @@
+"""Fused Pallas TPU round kernel: grads -> batch means -> Weiszfeld, one pass.
+
+The server's per-round hot path (paper Algorithm 2, steps 1-4) was three
+separate HBM-level stages in the scan trainer:
+
+    stacked per-worker gradients G (m, d)
+      -> k batch means Z (k, d)          [gather + reshape + mean]
+      -> norm trimming weights w (k,)    [one pass over Z]
+      -> Weiszfeld loop on Z             [2-3 passes over Z per iteration]
+
+This module fuses the whole thing into ONE kernel invocation:
+
+  * G is streamed tile-by-tile (m, TILE_D) — a single HBM read of the
+    stacked gradients;
+  * batch means are a (k, m) x (m, TILE_D) matmul against the grouping's
+    dense membership matrix (``core.grouping.assignment_matrix``), so any
+    grouping scheme — contiguous / strided / seeded, even or uneven batch
+    sizes — is the same MXU contraction;
+  * the (k, d) batch-mean block Z is accumulated into a VMEM-resident
+    buffer, and the trim weights (paper Remark 2) AND the full Weiszfeld
+    fixed-point loop run on that buffer without touching HBM again; only
+    the final aggregate y (d,) is written back.
+
+VMEM budget: the resident set is Z (k, d_pad) + y (d_pad) + one G tile
+(m, TILE_D) + S (k, m), all f32.  With k <= 64 this supports d up to
+~10^5 per call inside the default 8 MiB cap (``VMEM_BUDGET_BYTES``); the
+production dispatcher (``core.aggregators.gmom_aggregator``) falls back to
+the unfused jnp path above that, so model-scale leaves keep working.
+
+``round_aggregate_ref`` is the pure-jnp twin that mirrors the kernel's tile
+loop and operation order exactly — it is bit-identical to the kernel in
+interpret mode (tests/test_round_kernel.py asserts exact equality) and is
+the fused formulation benchmarked on non-TPU backends.
+
+``linreg_round_*`` goes one stage further for the paper's linear-regression
+substrate (§4): the kernel receives the RAW worker batches (X, y) and the
+current iterate theta, computes every worker's full-batch gradient
+(1/n) X_j^T (X_j theta - y_j) in-kernel (two streamed passes over X), and
+feeds it straight into the same means+trim+Weiszfeld tail — the entire
+round of Algorithm 2 as one kernel.
+
+The Weiszfeld loop is an early-exiting ``lax.while_loop`` with the same
+stopping rule as the unfused jnp path (squared movement <= tol^2, capped at
+``max_iters``).  In-kernel the loop carries ONLY scalars — the iterate
+lives in the output ref (``_finish_round``) — which is the
+Mosaic-friendliest shape for a data-dependent loop; the jnp reference
+(``_weiszfeld_resident``) carries the iterate through an ordinary array
+while-carry but computes the identical values iteration for iteration,
+which is what makes the kernel/reference pair bit-identical in interpret
+mode.  Validating the while-with-ref-state lowering on real TPU hardware
+is a recorded ROADMAP follow-up.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.grouping import Grouping, assignment_matrix
+
+TILE_D = 512
+VMEM_BUDGET_BYTES = 8 * 2**20   # conservative half of a ~16 MiB/core VMEM
+
+
+def default_use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_axis(x, tile: int, axis: int):
+    pad = (-x.shape[axis]) % tile
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# building blocks shared verbatim by the kernel and its jnp reference —
+# sharing the exact op sequence is what buys bit-equality in interpret mode.
+
+def _median_small(x):
+    """``jnp.median`` of a small 1D vector without sorting.
+
+    Mosaic has no in-kernel sort; for the k <= 64 trim-weight median we rank
+    every element against every other (O(k^2) compares on the VPU, ties
+    broken by index so ranks are a permutation) and select the middle order
+    statistic(s) by mask."""
+    k = x.shape[0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (k, k), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (k, k), 1)
+    xi, xj = x[:, None], x[None, :]
+    rank = jnp.sum((xj < xi) | ((xj == xi) & (jj < ii)), axis=1)   # (k,)
+
+    def order_stat(r):
+        return jnp.sum(jnp.where(rank == r, x, jnp.zeros_like(x)))
+
+    if k % 2 == 1:
+        return order_stat(k // 2)
+    return 0.5 * (order_stat(k // 2 - 1) + order_stat(k // 2))
+
+
+def _trim_weights_resident(z, *, trim_multiplier, k):
+    """Paper Remark-2 trim weights from the VMEM-resident batch means."""
+    if trim_multiplier is None:
+        return jnp.ones((k,), jnp.float32)
+    norms = jnp.sqrt(jnp.sum(z * z, axis=1))
+    tau = trim_multiplier * _median_small(norms) + 1e-12
+    w = (norms <= tau).astype(jnp.float32)
+    return jnp.where(jnp.sum(w) > 0, w, jnp.ones_like(w))
+
+
+def _weiszfeld_init(z, w, eps):
+    """Weighted-mean initial iterate (the k=1 aggregate), shape (1, d)."""
+    w_sum = jnp.maximum(jnp.sum(w), eps)
+    return jnp.dot(w.reshape(1, z.shape[0]), z,
+                   preferred_element_type=jnp.float32) / w_sum
+
+
+def _weiszfeld_step_vals(z, w, y, *, eps):
+    """One Weiszfeld update on the resident block: (y_new, squared move)."""
+    diff = z - y                                   # (k, d)
+    sq = jnp.sum(diff * diff, axis=1)              # (k,)
+    dist = jnp.sqrt(sq + eps * eps)
+    inv = w / dist
+    denom = jnp.maximum(jnp.sum(inv), eps)
+    y_new = jnp.dot((inv / denom).reshape(1, z.shape[0]), z,
+                    preferred_element_type=jnp.float32)
+    return y_new, jnp.sum((y_new - y) ** 2)
+
+
+def _weiszfeld_resident(z, w, *, max_iters, tol, eps):
+    """Full Weiszfeld loop on a resident (k, d) block -> (1, d) median.
+
+    Early-exiting loop: stop when the squared movement drops to tol^2 or
+    after ``max_iters`` steps — the same stopping rule as the unfused jnp
+    path.  The kernels inline the identical step with the iterate held in
+    the output ref and only scalars in the while carry (``_finish_round``),
+    so both forms compute the same values iteration for iteration."""
+    def cond(carry):
+        _, it, delta2 = carry
+        return jnp.logical_and(it < max_iters, delta2 > tol * tol)
+
+    def body(carry):
+        y, it, _ = carry
+        y_new, delta2 = _weiszfeld_step_vals(z, w, y, eps=eps)
+        return y_new, it + 1, delta2
+
+    y, _, _ = jax.lax.while_loop(
+        cond, body, (_weiszfeld_init(z, w, eps),
+                     jnp.zeros((), jnp.int32),
+                     jnp.array(jnp.inf, jnp.float32)))
+    return y
+
+
+def _means_trim_weiszfeld(z, *, k, trim_multiplier, max_iters, tol, eps):
+    w = _trim_weights_resident(z, trim_multiplier=trim_multiplier, k=k)
+    return _weiszfeld_resident(z, w, max_iters=max_iters, tol=tol, eps=eps)
+
+
+def _finish_round(z, y_ref, *, trim_multiplier, max_iters, tol, eps):
+    """In-kernel tail: trim + Weiszfeld with the iterate living in the
+    output ref.  The while carry holds only scalars (iteration count and
+    last squared movement) — the Mosaic-friendly loop shape — while every
+    per-iteration value matches ``_weiszfeld_resident`` exactly."""
+    k = z.shape[0]
+    w = _trim_weights_resident(z, trim_multiplier=trim_multiplier, k=k)
+    y_ref[...] = _weiszfeld_init(z, w, eps)
+
+    def cond(carry):
+        it, delta2 = carry
+        return jnp.logical_and(it < max_iters, delta2 > tol * tol)
+
+    def body(carry):
+        it, _ = carry
+        y_new, delta2 = _weiszfeld_step_vals(z, w, y_ref[...], eps=eps)
+        y_ref[...] = y_new
+        return it + 1, delta2
+
+    jax.lax.while_loop(cond, body, (jnp.zeros((), jnp.int32),
+                                    jnp.array(jnp.inf, jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# kernel 1: stacked gradients -> aggregate   (the scan trainer's hot path)
+
+def _round_kernel(g_ref, s_ref, bsz_ref, y_ref, z_ref, *, n_tiles, tile_d,
+                  trim_multiplier, max_iters, tol, eps):
+    """Grid over d-tiles; z_ref is the VMEM-resident (k, d_pad) accumulator
+    (an output revisited by every step so it persists across the grid)."""
+    i = pl.program_id(0)
+    sums = jnp.dot(s_ref[...], g_ref[...],
+                   preferred_element_type=jnp.float32)      # (k, tile_d)
+    z_ref[:, pl.ds(i * tile_d, tile_d)] = sums / bsz_ref[...]
+
+    @pl.when(i == n_tiles - 1)
+    def _finish():
+        _finish_round(z_ref[...], y_ref, trim_multiplier=trim_multiplier,
+                      max_iters=max_iters, tol=tol, eps=eps)
+
+
+def round_resident_bytes(m: int, k: int, d: int,
+                         tile_d: int = TILE_D) -> int:
+    """VMEM-resident f32 footprint of ``round_aggregate_kernel``: the Z
+    block + y output + one streamed G tile + the membership matrix.  The
+    dispatcher (``core.aggregators.resolve_round_backend``) and the kernel's
+    own guard use this same formula, so 'auto' never dispatches a shape the
+    kernel would reject."""
+    d_pad = -(-d // tile_d) * tile_d
+    return ((k + 1) * d_pad + m * tile_d + k * m) * 4
+
+
+def fits_vmem(m: int, k: int, d: int, tile_d: int = TILE_D) -> bool:
+    return round_resident_bytes(m, k, d, tile_d) <= VMEM_BUDGET_BYTES
+
+
+def _check_vmem(k: int, d_pad: int, extra_bytes: int = 0):
+    resident = (k + 1) * d_pad * 4 + extra_bytes
+    if resident > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"fused round kernel resident set {resident} B (k={k}, "
+            f"d_pad={d_pad}) exceeds VMEM budget {VMEM_BUDGET_BYTES} B; "
+            "use the unfused jnp path (round_backend='reference')")
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "grouping", "trim_multiplier", "max_iters", "tol", "eps", "tile_d",
+    "interpret"))
+def round_aggregate_kernel(stacked_grads, grouping: Grouping, *,
+                           trim_multiplier: float | None = 3.0,
+                           max_iters: int = 64, tol: float = 1e-8,
+                           eps: float = 1e-12, tile_d: int = TILE_D,
+                           interpret: bool = False):
+    """Fused GMoM round: stacked (m, d) gradients -> (d,) aggregate.
+
+    One HBM read of the stacked gradients; batch means, Remark-2 trimming,
+    and the entire Weiszfeld loop happen on the VMEM-resident (k, d) block.
+    Bit-identical to ``round_aggregate_ref`` in interpret mode.
+    """
+    m, d = stacked_grads.shape
+    k = grouping.num_batches
+    g = _pad_axis(stacked_grads.astype(jnp.float32), tile_d, 1)
+    d_pad = g.shape[1]
+    n_tiles = d_pad // tile_d
+    _check_vmem(k, d_pad, extra_bytes=(m * tile_d + k * m) * 4)
+    s = jnp.asarray(assignment_matrix(grouping))
+    bsz = jnp.asarray(grouping.batch_sizes, jnp.float32).reshape(k, 1)
+
+    y, _ = pl.pallas_call(
+        functools.partial(_round_kernel, n_tiles=n_tiles, tile_d=tile_d,
+                          trim_multiplier=trim_multiplier,
+                          max_iters=max_iters, tol=tol, eps=eps),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((m, tile_d), lambda i: (0, i)),
+            pl.BlockSpec((k, m), lambda i: (0, 0)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d_pad), lambda i: (0, 0)),
+            pl.BlockSpec((k, d_pad), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, d_pad), jnp.float32),
+            jax.ShapeDtypeStruct((k, d_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, s, bsz)
+    return y[0, :d]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "grouping", "trim_multiplier", "max_iters", "tol", "eps", "tile_d"))
+def round_aggregate_ref(stacked_grads, grouping: Grouping, *,
+                        trim_multiplier: float | None = 3.0,
+                        max_iters: int = 64, tol: float = 1e-8,
+                        eps: float = 1e-12, tile_d: int = TILE_D):
+    """jnp twin of ``round_aggregate_kernel``: same ops, same reductions.
+
+    This is the fused formulation on non-TPU backends (one membership
+    matmul for the means, early-exiting flat-block Weiszfeld) and the
+    bit-exact oracle for the kernel in interpret mode.  The
+    means are ONE flat dot rather than a d-tile loop: the contraction runs
+    over the worker axis only, so every output column depends on exactly
+    one input column and the d-tiling of the kernel cannot change any
+    reduction order (tests/test_round_kernel.py asserts exact equality).
+    Only the small (k, d) mean block is padded — the kernel's padded-G
+    tiles produce exactly-zero padded mean columns, so padding Z after the
+    matmul is bitwise the same and skips an O(m d) copy.
+    """
+    m, d = stacked_grads.shape
+    k = grouping.num_batches
+    g = stacked_grads.astype(jnp.float32)
+    s = jnp.asarray(assignment_matrix(grouping))
+    bsz = jnp.asarray(grouping.batch_sizes, jnp.float32).reshape(k, 1)
+    z = jnp.dot(s, g, preferred_element_type=jnp.float32) / bsz
+    z = _pad_axis(z, tile_d, 1)
+    y = _means_trim_weiszfeld(z, k=k, trim_multiplier=trim_multiplier,
+                              max_iters=max_iters, tol=tol, eps=eps)
+    return y[0, :d]
+
+
+def round_aggregate_pytree(stacked_grads, grouping: Grouping, *,
+                           trim_multiplier: float | None = 3.0,
+                           max_iters: int = 64, tol: float = 1e-8,
+                           eps: float = 1e-12, tile_d: int = TILE_D,
+                           use_pallas: bool | None = None,
+                           interpret: bool = False):
+    """Pytree front door: stacked (m, ...) gradient pytree -> aggregate.
+
+    Leaves are flattened and concatenated into one (m, D) f32 block (the
+    geometric median is taken in the concatenated R^D, exactly like
+    ``core.geometric_median_pytree``) and the result is split back, cast to
+    each leaf's dtype.  Compute is f32 throughout.
+    """
+    leaves, treedef = jax.tree.flatten(stacked_grads)
+    m = leaves[0].shape[0]
+    flat = [l.reshape(m, -1).astype(jnp.float32) for l in leaves]
+    block = flat[0] if len(flat) == 1 else jnp.concatenate(flat, axis=1)
+    use_pallas = default_use_pallas() if use_pallas is None else use_pallas
+    fn = (round_aggregate_kernel if (use_pallas or interpret)
+          else round_aggregate_ref)
+    kwargs = dict(trim_multiplier=trim_multiplier, max_iters=max_iters,
+                  tol=tol, eps=eps, tile_d=tile_d)
+    if use_pallas or interpret:
+        kwargs["interpret"] = interpret
+    y = fn(block, grouping, **kwargs)
+    out, offset = [], 0
+    for l in leaves:
+        size = int(np.prod(l.shape[1:], dtype=np.int64)) if l.ndim > 1 else 1
+        piece = jax.lax.slice_in_dim(y, offset, offset + size, axis=0)
+        out.append(piece.reshape(l.shape[1:]).astype(l.dtype))
+        offset += size
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# kernel 2: raw linreg batches -> aggregate  (the whole round in-kernel)
+
+def _linreg_round_kernel(x_ref, t_ref, theta_ref, s_ref, bsz_ref,
+                         y_ref, r_ref, z_ref, *, n_tiles, tile_d, inv_n,
+                         trim_multiplier, max_iters, tol, eps):
+    """Grid (2, n_tiles).  Phase 0 streams X to build the residual
+    R = X @ theta - y (resident, (m, n)); phase 1 streams X again to form
+    each worker's gradient tile (1/n) X^T R, contracts it with the
+    membership matrix into the resident batch means, and finishes with the
+    same trim + Weiszfeld tail as the gradient-input kernel.  X is read
+    twice and nothing else touches HBM."""
+    phase = pl.program_id(0)
+    i = pl.program_id(1)
+    x = x_ref[...]                                     # (m, n, tile_d)
+    theta_t = theta_ref[...]                           # (1, tile_d)
+
+    @pl.when(phase == 0)
+    def _residual():
+        @pl.when(i == 0)
+        def _init():
+            r_ref[...] = -t_ref[...]
+        # R += X[:, :, tile] @ theta[tile]
+        part = jax.lax.dot_general(
+            x, theta_t.reshape(tile_d, 1),
+            dimension_numbers=(((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (m, n, 1)
+        r_ref[...] += part[..., 0]
+
+    @pl.when(phase == 1)
+    def _grads_means():
+        r = r_ref[...]                                 # (m, n)
+        # worker gradients for this tile: (1/n) X_j^T r_j, all j at once
+        g = jax.lax.dot_general(
+            r, x, dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * inv_n  # (m, tile_d)
+        sums = jnp.dot(s_ref[...], g,
+                       preferred_element_type=jnp.float32)
+        z_ref[:, pl.ds(i * tile_d, tile_d)] = sums / bsz_ref[...]
+
+        @pl.when(i == n_tiles - 1)
+        def _finish():
+            _finish_round(z_ref[...], y_ref, trim_multiplier=trim_multiplier,
+                          max_iters=max_iters, tol=tol, eps=eps)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "grouping", "trim_multiplier", "max_iters", "tol", "eps", "tile_d",
+    "interpret"))
+def linreg_round_kernel(features, targets, theta, grouping: Grouping, *,
+                        trim_multiplier: float | None = 3.0,
+                        max_iters: int = 64, tol: float = 1e-8,
+                        eps: float = 1e-12, tile_d: int = 256,
+                        interpret: bool = False):
+    """One FULL failure-free round of Algorithm 2 on the linreg substrate:
+    (X (m, n, d), y (m, n), theta (d,)) -> robust aggregate gradient (d,).
+
+    The per-worker full-batch gradients (1/n) X_j^T (X_j theta - y_j) are
+    computed in-kernel — the raw batches never materialize a gradient,
+    batch-mean, or distance tensor in HBM.
+    """
+    m, n, d = features.shape
+    k = grouping.num_batches
+    x = _pad_axis(features.astype(jnp.float32), tile_d, 2)
+    d_pad = x.shape[2]
+    n_tiles = d_pad // tile_d
+    _check_vmem(k, d_pad,
+                extra_bytes=(m * n * tile_d + m * n + k * m) * 4)
+    theta_p = _pad_axis(theta.astype(jnp.float32).reshape(1, d), tile_d, 1)
+    s = jnp.asarray(assignment_matrix(grouping))
+    bsz = jnp.asarray(grouping.batch_sizes, jnp.float32).reshape(k, 1)
+
+    y, _, _ = pl.pallas_call(
+        functools.partial(_linreg_round_kernel, n_tiles=n_tiles,
+                          tile_d=tile_d, inv_n=1.0 / n,
+                          trim_multiplier=trim_multiplier,
+                          max_iters=max_iters, tol=tol, eps=eps),
+        grid=(2, n_tiles),
+        in_specs=[
+            pl.BlockSpec((m, n, tile_d), lambda p, i: (0, 0, i)),
+            pl.BlockSpec((m, n), lambda p, i: (0, 0)),
+            pl.BlockSpec((1, tile_d), lambda p, i: (0, i)),
+            pl.BlockSpec((k, m), lambda p, i: (0, 0)),
+            pl.BlockSpec((k, 1), lambda p, i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d_pad), lambda p, i: (0, 0)),
+            pl.BlockSpec((m, n), lambda p, i: (0, 0)),
+            pl.BlockSpec((k, d_pad), lambda p, i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, d_pad), jnp.float32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((k, d_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, targets.astype(jnp.float32), theta_p, s, bsz)
+    return y[0, :d]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "grouping", "trim_multiplier", "max_iters", "tol", "eps", "tile_d"))
+def linreg_round_ref(features, targets, theta, grouping: Grouping, *,
+                     trim_multiplier: float | None = 3.0,
+                     max_iters: int = 64, tol: float = 1e-8,
+                     eps: float = 1e-12, tile_d: int = 256):
+    """jnp twin of ``linreg_round_kernel`` (same tiling and op order): the
+    bit-exact interpret-mode oracle.  Unlike the gradient-input case, the
+    residual accumulates over d-tiles (the contraction runs over the tiled
+    axis), so the mirror must replay the kernel's tile loop and partial-sum
+    chaining exactly; benchmarks use ``linreg_round_fused`` — the same
+    algorithm without the tile structure — on non-TPU backends."""
+    m, n, d = features.shape
+    k = grouping.num_batches
+    x = _pad_axis(features.astype(jnp.float32), tile_d, 2)
+    d_pad = x.shape[2]
+    n_tiles = d_pad // tile_d
+    theta_p = _pad_axis(theta.astype(jnp.float32).reshape(1, d), tile_d, 1)
+    s = jnp.asarray(assignment_matrix(grouping))
+    bsz = jnp.asarray(grouping.batch_sizes, jnp.float32).reshape(k, 1)
+    inv_n = 1.0 / n
+
+    r = -targets.astype(jnp.float32)
+    xt = [jax.lax.slice_in_dim(x, i * tile_d, (i + 1) * tile_d, axis=2)
+          for i in range(n_tiles)]
+    tt = [jax.lax.slice_in_dim(theta_p, i * tile_d, (i + 1) * tile_d, axis=1)
+          for i in range(n_tiles)]
+    for i in range(n_tiles):
+        part = jax.lax.dot_general(
+            xt[i], tt[i].reshape(tile_d, 1),
+            dimension_numbers=(((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        r = r + part[..., 0]
+    tiles = []
+    for i in range(n_tiles):
+        g = jax.lax.dot_general(
+            r, xt[i], dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * inv_n
+        tiles.append(jnp.dot(s, g, preferred_element_type=jnp.float32)
+                     / bsz)
+    z = jnp.concatenate(tiles, axis=1) if n_tiles > 1 else tiles[0]
+    y = _means_trim_weiszfeld(z, k=k, trim_multiplier=trim_multiplier,
+                              max_iters=max_iters, tol=tol, eps=eps)
+    return y[0, :d]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "grouping", "trim_multiplier", "max_iters", "tol", "eps"))
+def linreg_round_fused(features, targets, theta, grouping: Grouping, *,
+                       trim_multiplier: float | None = 3.0,
+                       max_iters: int = 64, tol: float = 1e-8,
+                       eps: float = 1e-12):
+    """The fused full-round formulation for non-TPU backends: same algorithm
+    as ``linreg_round_kernel`` (analytic per-worker gradients -> membership
+    matmul means -> resident trim + Weiszfeld), written as flat jnp so XLA
+    lowers it well on CPU/GPU.  Agrees with the kernel to float tolerance
+    (reduction orders differ along d); the benchmark's "fused" entrant on
+    this container's backend."""
+    m, n, d = features.shape
+    k = grouping.num_batches
+    x = features.astype(jnp.float32)
+    s = jnp.asarray(assignment_matrix(grouping))
+    bsz = jnp.asarray(grouping.batch_sizes, jnp.float32).reshape(k, 1)
+    theta = theta.astype(jnp.float32)
+    r = jax.lax.dot_general(
+        x, theta.reshape(d, 1),
+        dimension_numbers=(((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[..., 0] \
+        - targets.astype(jnp.float32)                       # (m, n)
+    g = jax.lax.dot_general(
+        r, x, dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * (1.0 / n)     # (m, d)
+    z = jnp.dot(s, g, preferred_element_type=jnp.float32) / bsz
+    y = _means_trim_weiszfeld(z, k=k, trim_multiplier=trim_multiplier,
+                              max_iters=max_iters, tol=tol, eps=eps)
+    return y[0, :d]

@@ -95,7 +95,8 @@ def train_cpu(args) -> dict:
                          seed=args.seed)
     rc = RobustConfig(num_workers=m, num_byzantine=args.byzantine,
                       attack=args.attack, aggregator=args.aggregator,
-                      num_batches=args.num_batches)
+                      num_batches=args.num_batches,
+                      round_backend=args.round_backend)
     opt = optim.adamw(args.lr)
     loss_fn = lambda p, b: model_lib.loss_fn(p, b, cfg)  # noqa: E731
     if args.schedule:
@@ -181,6 +182,10 @@ def main(argv=None):
                    help="multi-round attack schedule (default: rotating)")
     p.add_argument("--scan-chunk", type=int, default=10, dest="scan_chunk",
                    help="rounds fused into one lax.scan dispatch")
+    p.add_argument("--round-backend", default="auto", dest="round_backend",
+                   choices=["auto", "fused", "fused_interpret", "reference"],
+                   help="gmom hot-path lowering: fused Pallas round kernel "
+                        "vs jnp reference (auto: fused on TPU)")
     p.add_argument("--aggregator", default="gmom",
                    choices=aggregators.available())
     p.add_argument("--batch", type=int, default=16)

@@ -36,8 +36,14 @@ def build_schedule(sc: Scenario) -> byzantine.AttackSchedule:
         attack_kwargs=sc.attack_kwargs, **dict(sc.schedule_kwargs))
 
 
-def _build_run(sc: Scenario):
-    """Shared setup: (runner, round-zero TrainState, worker_batches, rc)."""
+def _build_run(sc: Scenario, *, round_backend: str = "auto"):
+    """Shared setup: (runner, round-zero TrainState, worker_batches, rc).
+
+    ``round_backend`` selects the gmom hot-path lowering (see
+    ``core.aggregators``): the default ``auto`` resolves to the jnp
+    reference pipeline on CPU — the path every golden trace is recorded
+    on — and the fused Pallas round kernel on TPU; tests force
+    ``fused_interpret`` to replay goldens through the kernel."""
     key = jax.random.PRNGKey(sc.seed)
     ds = regression.generate(key, dim=sc.dim, total_samples=sc.total_samples,
                              num_workers=sc.num_workers,
@@ -46,7 +52,8 @@ def _build_run(sc: Scenario):
                       num_byzantine=sc.num_byzantine,
                       num_batches=sc.num_batches,
                       aggregator=sc.aggregator, attack=sc.attack,
-                      attack_kwargs=sc.attack_kwargs)
+                      attack_kwargs=sc.attack_kwargs,
+                      round_backend=round_backend)
     opt = optim.sgd(sc.step_size)
     theta_star = ds.theta_star
 
@@ -87,12 +94,13 @@ def _trace(sc: Scenario, rc: RobustConfig, rounds: int, metrics) -> dict:
     }
 
 
-def run_scenario(sc: Scenario | str, *, rounds: int | None = None) -> dict:
+def run_scenario(sc: Scenario | str, *, rounds: int | None = None,
+                 round_backend: str = "auto") -> dict:
     """Run one scenario end to end; returns a JSON-ready trace dict."""
     if isinstance(sc, str):
         sc = get_scenario(sc)
     rounds = sc.rounds if rounds is None else rounds
-    run, state, batches, rc, _ = _build_run(sc)
+    run, state, batches, rc, _ = _build_run(sc, round_backend=round_backend)
     state, _ = advance(run, state, batches, num_rounds=rounds)
     return _trace(sc, rc, rounds, state.history)
 

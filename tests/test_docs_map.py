@@ -1,0 +1,19 @@
+"""Tier-1 wrapper around scripts/check_docs.py: the paper↔code map
+(docs/PAPER_MAP.md), the README aggregator table, and the checked-in
+BENCH_round_kernel.json must stay consistent with the live registries."""
+
+import os
+import sys
+
+SCRIPTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "scripts")
+
+
+def test_docs_registries_consistent():
+    sys.path.insert(0, SCRIPTS)
+    try:
+        import check_docs
+        problems = check_docs.collect_problems()
+    finally:
+        sys.path.remove(SCRIPTS)
+    assert not problems, "\n".join(problems)
