@@ -10,7 +10,11 @@ Fails (non-zero exit / raised AssertionError from pytest) when:
 * the README aggregator table is missing a registered aggregator;
 * the checked-in benchmarks/BENCH_round_kernel.json is absent, unparsable,
   or its recorded headline claim (fused beats unfused at the paper-scale
-  configuration on the recorded backend) does not hold.
+  configuration on the recorded backend) does not hold;
+* a registered pod-sweep scenario or production mesh (repro.sim.sweep) is
+  missing from the checked-in benchmarks/BENCH_pod_sweeps.json, or a
+  sweep-matrix axis value (attack/schedule/aggregator/mesh) is missing
+  from the docs/BENCHMARKS.md sweep tables.
 
 Run directly::
 
@@ -88,6 +92,58 @@ def collect_problems() -> list[str]:
                     problems.append(
                         f"{bench_path}: paper_scale row {row} has "
                         "speedup <= 1")
+
+    problems += _pod_sweep_problems(paper_map)
+    return problems
+
+
+def _pod_sweep_problems(paper_map: str) -> list[str]:
+    """The pod-sweep contract: registry ⊆ checked-in record ∧ docs tables."""
+    from repro.sim import sweep
+
+    problems: list[str] = []
+    benchmarks_md = _read(os.path.join("docs", "BENCHMARKS.md"))
+
+    # every matrix axis value must be documented in the BENCHMARKS.md sweep
+    # section, and the sweep module must be anchored in the paper map.
+    for kind, values in (("attack", sweep.POD_ATTACKS),
+                         ("schedule", sweep.POD_SCHEDULES),
+                         ("aggregator", sweep.POD_AGGREGATORS),
+                         ("mesh", sweep.POD_MESHES)):
+        for v in values:
+            if f"`{v}`" not in benchmarks_md:
+                problems.append(
+                    f"pod-sweep {kind} {v!r} is in the sweep matrix but "
+                    "missing from the docs/BENCHMARKS.md sweep tables")
+    if "repro.sim.sweep" not in paper_map:
+        problems.append(
+            "docs/PAPER_MAP.md does not anchor `repro.sim.sweep` "
+            "(§5 communication-cost rows)")
+
+    sweep_path = os.path.join("benchmarks", "BENCH_pod_sweeps.json")
+    if not os.path.exists(os.path.join(REPO, sweep_path)):
+        problems.append(
+            f"{sweep_path} is not checked in "
+            "(run python -m repro.sim.sweep --all)")
+        return problems
+    try:
+        rec = json.loads(_read(sweep_path))
+    except json.JSONDecodeError as e:
+        problems.append(f"{sweep_path} does not parse: {e}")
+        return problems
+    scenarios = rec.get("scenarios", {})
+    for name in sweep.available():
+        if name not in scenarios:
+            problems.append(
+                f"pod scenario {name!r} is registered but missing from "
+                f"{sweep_path} — re-record with "
+                "`python -m repro.sim.sweep --all`")
+    recorded_meshes = {e.get("mesh") for e in scenarios.values()}
+    for mesh in sweep.POD_MESHES:
+        if mesh not in recorded_meshes:
+            problems.append(
+                f"production mesh {mesh!r} has no recorded scenario in "
+                f"{sweep_path}")
     return problems
 
 
@@ -98,8 +154,9 @@ def main() -> int:
     if problems:
         print(f"check_docs: FAILED ({len(problems)} problem(s))")
         return 1
-    print("check_docs: ok — registries, PAPER_MAP, README table, and "
-          "BENCH_round_kernel.json are consistent")
+    print("check_docs: ok — registries, PAPER_MAP, README table, "
+          "BENCH_round_kernel.json, and the pod-sweep record/docs are "
+          "consistent")
     return 0
 
 

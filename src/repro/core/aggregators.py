@@ -123,6 +123,14 @@ def _apply_grouping(stacked, grouping: Grouping):
     assumption) have no reshape view; their means are a single contraction
     with the {0,1} membership matrix, computed in f32."""
     k = grouping.num_batches
+    if k == grouping.num_workers and \
+            grouping.perm == tuple(range(grouping.num_workers)):
+        # identity grouping (k = m, contiguous): every report is its own
+        # batch mean.  The group-mode production step lands here (its k
+        # batch-group gradients ARE the means), so skip the no-op
+        # gather/reshape/mean — a singleton-axis mean is bitwise the
+        # identity, but lowers as avoidable data movement on sharded grads.
+        return stacked
     if not grouping.is_even:
         from repro.core.grouping import assignment_matrix
         s = jnp.asarray(assignment_matrix(grouping))

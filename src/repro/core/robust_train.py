@@ -271,7 +271,15 @@ def make_shardmap_aggregate(cfg: RobustConfig, mesh, worker_axes=("data",)):
       1. psum the gradients *within* each batch subgroup via one
          all-reduce over the worker axis with a batch-block mask — realized
          as all_gather of batch-mean partial sums only (k×shard, not m×shard);
-      2. runs Weiszfeld on the k means locally (replicated over data).
+      2. runs the trim + Weiszfeld tail on the k means locally (replicated
+         over data), dispatched through ``cfg.round_backend`` exactly like
+         ``gmom_aggregator``: the fused Pallas round kernel
+         (``repro.kernels.geomed.round``) keeps the (k, d) block
+         VMEM-resident on TPU; the jnp reference pipeline runs elsewhere
+         (and whenever the block exceeds the kernel's VMEM budget).
+         Because step 1 already produced the means, the kernel is invoked
+         with the k = m identity grouping — its membership matmul is the
+         identity and only the resident trim + Weiszfeld stages do work.
 
     Requires the worker axis size to equal cfg.num_workers and contiguous
     grouping.  Returns ``fn(stacked_local_grads) -> agg_grad`` to be called
@@ -310,6 +318,18 @@ def make_shardmap_aggregate(cfg: RobustConfig, mesh, worker_axes=("data",)):
             return jax.lax.psum(contrib, axis_name=axis)
 
         means = jax.tree.map(leaf, my_grad)
+        backend = aggregators.resolve_round_backend(
+            cfg.round_backend, num_batches=k,
+            total_dim=aggregators._total_dim(means), num_workers=k)
+        if backend != "reference":
+            from repro.core.grouping import make_grouping
+            from repro.kernels.geomed import round as round_kernel
+            return round_kernel.round_aggregate_pytree(
+                means, make_grouping(k, k),
+                trim_multiplier=cfg.trim_multiplier,
+                max_iters=cfg.gmom_max_iters, tol=cfg.gmom_tol,
+                use_pallas=(backend == "fused"),
+                interpret=(backend == "fused_interpret"))
         weights = None
         if cfg.trim_multiplier is not None:
             norms = batch_mean_norms(means)

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (architecture × input shape) on
 the production meshes with 512 placeholder host devices.
 
@@ -15,13 +12,25 @@ Usage:
     python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
     python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
 
-NOTE: the XLA_FLAGS line above MUST run before any other import — jax locks
-the device count at first init (do not set this flag globally; smoke tests
-and benchmarks must see 1 device).
+The production meshes need 256/512 devices; on a CPU host the entry points
+call :func:`force_host_device_count` BEFORE jax's backend initializes.  This
+used to happen as an import-time ``os.environ`` mutation, which poisoned any
+process that imported dryrun helpers after its own jax init (a later import
+silently saw 512 virtual devices — or, worse, tests importing this module
+for its helper API flipped the flag under an already-initialized backend).
+Import is now side-effect free: callers that want the 512-device dry-run
+environment invoke ``force_host_device_count`` explicitly (both CLI ``main``
+entry points here and in ``repro.sim.sweep`` do), and everything else —
+``lower_pair``/``dryrun_pair`` with an injected small mesh, the sweep's
+comparison helpers, CI test collection — imports safely.
 """
 
+from __future__ import annotations
+
 import argparse
-import json
+import dataclasses
+import os
+import re
 import sys
 import time
 import traceback
@@ -30,27 +39,115 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHITECTURES, get_shape
+from repro.configs.base import ModelConfig
 from repro.models.meshctx import set_mesh
-from repro.core import RobustConfig
+from repro.core import RobustConfig, byzantine
 from repro.launch import mesh as mesh_lib
 from repro.launch import sharding, steps
 from repro.roofline import analysis
 from repro import optim
+
+DEFAULT_HOST_DEVICE_COUNT = 512
+
+
+def _jax_backend_initialized() -> bool:
+    """True once jax has locked its device count (first backend init)."""
+    try:
+        from jax._src import xla_bridge as xb
+    except Exception:  # pragma: no cover - private-API drift
+        return False
+    if hasattr(xb, "backends_are_initialized"):
+        try:
+            return bool(xb.backends_are_initialized())
+        except Exception:  # pragma: no cover
+            pass
+    return bool(getattr(xb, "_backends", None))
+
+
+def force_host_device_count(count: int = DEFAULT_HOST_DEVICE_COUNT) -> None:
+    """Arm ``--xla_force_host_platform_device_count=<count>``.
+
+    Must run before jax initializes its backend (jax locks the device count
+    at first init).  Raises if the backend is already up with fewer devices
+    than requested — the old import-time mutation failed silently in exactly
+    this case.  No-op when the live backend already has enough devices
+    (e.g. a subprocess that exported the flag itself).
+    """
+    if _jax_backend_initialized():
+        if jax.device_count() >= count:
+            return
+        raise RuntimeError(
+            f"jax backend already initialized with {jax.device_count()} "
+            f"device(s); cannot force {count} host devices now.  Call "
+            "force_host_device_count() before any jax device/array use, or "
+            "export XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{count} before starting python.")
+    flags = os.environ.get("XLA_FLAGS", "")
+    flag_re = re.compile(
+        r"--xla_force_host_platform_device_count=(\d+)")
+    m = flag_re.search(flags)
+    if m is not None:
+        # a pre-existing smaller count (e.g. an exported =8 from a test
+        # shell) would make the production meshes fail later with a
+        # confusing mesh-size error — raise it in place instead.
+        if int(m.group(1)) >= count:
+            return
+        os.environ["XLA_FLAGS"] = flag_re.sub(
+            f"--xla_force_host_platform_device_count={count}", flags)
+        return
+    os.environ["XLA_FLAGS"] = (
+        flags + f" --xla_force_host_platform_device_count={count}").strip()
 
 
 def _mesh_name(mesh) -> str:
     return "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
 
 
-def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
-                mesh=None, num_groups: int = 4, microbatches: int = 1,
-                fsdp: bool = True, verbose: bool = True,
-                return_artifacts: bool = False):
-    """Lower+compile one (arch, shape, mesh); returns a RooflineRecord."""
+@dataclasses.dataclass
+class DryrunArtifacts:
+    """Everything one lower+compile produces, for downstream consumers.
+
+    ``repro.sim.sweep`` builds per-scenario collective-cost entries from
+    these; ``dryrun_pair`` keeps its original record-only return."""
+    arch: str
+    shape_name: str
+    mesh_name: str
+    step_kind: str
+    num_chips: int
+    cfg: ModelConfig
+    shape: object
+    record: analysis.RooflineRecord
+    lowered: object
+    compiled: object
+    compile_seconds: float
+
+
+def default_train_rc(num_groups: int) -> RobustConfig:
+    """The historical dry-run aggregation config (gmom + sign_flip)."""
+    return RobustConfig(num_workers=num_groups, num_byzantine=1,
+                        num_batches=num_groups, aggregator="gmom",
+                        attack="sign_flip", gmom_max_iters=8)
+
+
+def lower_pair(arch_or_cfg, shape_name: str, *, multi_pod: bool = False,
+               mesh=None, num_groups: int = 4, microbatches: int = 1,
+               fsdp: bool = True, rc: RobustConfig | None = None,
+               schedule: byzantine.AttackSchedule | None = None,
+               verbose: bool = True) -> DryrunArtifacts:
+    """Lower + compile one (arch, shape, mesh) and return all artifacts.
+
+    ``rc`` injects the full aggregation pipeline configuration (aggregator,
+    attack, round_backend, trim, ...) into the group-mode train step;
+    ``schedule`` additionally threads a multi-round ``AttackSchedule``
+    through the step (the lowered function then takes/returns the
+    adversary's carried state).  Train shapes only; both default to the
+    historical gmom + sign_flip dry-run configuration.
+    """
     if mesh is None:
         mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
-    cfg, shape, batch = steps.input_specs(arch, shape_name,
+    cfg, shape, batch = steps.input_specs(arch_or_cfg, shape_name,
                                           num_groups=num_groups)
+    arch = arch_or_cfg if isinstance(arch_or_cfg, str) else cfg.name
     num_chips = mesh.size
     t0 = time.time()
 
@@ -59,9 +156,8 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
         pshard = sharding.param_shardings(params_s, mesh, cfg, fsdp=fsdp)
 
         if shape.kind == "train":
-            rc = RobustConfig(num_workers=num_groups, num_byzantine=1,
-                              num_batches=num_groups, aggregator="gmom",
-                              attack="sign_flip", gmom_max_iters=8)
+            if rc is None:
+                rc = default_train_rc(num_groups)
             opt = optim.adamw(3e-4)
             opt_s = steps.abstract_opt_state(opt, params_s)
             oshard = sharding.opt_state_shardings(opt_s, params_s, mesh,
@@ -71,16 +167,26 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
                                                      fsdp=fsdp)
             step_fn = steps.make_group_train_step(cfg, rc, opt,
                                                   microbatches=microbatches,
-                                                  grad_shardings=gshard)
+                                                  grad_shardings=gshard,
+                                                  schedule=schedule)
             key_s = jax.ShapeDtypeStruct((2,), jax.numpy.uint32)
+            round_s = jax.ShapeDtypeStruct((), jax.numpy.int32)
             rep = sharding.replicated(mesh)
-            jitted = jax.jit(
-                step_fn,
-                in_shardings=(pshard, oshard, bshard, rep, rep),
-                donate_argnums=(0, 1))
-            lowered = jitted.lower(
-                params_s, opt_s, batch, key_s,
-                jax.ShapeDtypeStruct((), jax.numpy.int32))
+            if schedule is None:
+                jitted = jax.jit(
+                    step_fn,
+                    in_shardings=(pshard, oshard, bshard, rep, rep),
+                    donate_argnums=(0, 1))
+                lowered = jitted.lower(params_s, opt_s, batch, key_s, round_s)
+            else:
+                astate_s = jax.eval_shape(schedule.init_state)
+                ashard = jax.tree.map(lambda _: rep, astate_s)
+                jitted = jax.jit(
+                    step_fn,
+                    in_shardings=(pshard, oshard, bshard, rep, rep, ashard),
+                    donate_argnums=(0, 1))
+                lowered = jitted.lower(params_s, opt_s, batch, key_s,
+                                       round_s, astate_s)
             step_kind = "train_step"
 
         elif shape.kind == "prefill":
@@ -112,13 +218,14 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
 
         compiled = lowered.compile()
 
+    elapsed = time.time() - t0
     record = analysis.build_record(
         arch=arch, shape=shape, cfg=cfg, mesh_name=_mesh_name(mesh),
         num_chips=num_chips, step=step_kind, compiled=compiled)
     if verbose:
         mem = compiled.memory_analysis()
         print(f"[dryrun] {arch} × {shape_name} × {_mesh_name(mesh)} "
-              f"({step_kind}) compiled in {time.time() - t0:.1f}s")
+              f"({step_kind}) compiled in {elapsed:.1f}s")
         print(f"  memory_analysis: {mem}")
         ca = compiled.cost_analysis()
         if isinstance(ca, list):
@@ -131,9 +238,29 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
               f"collective={record.collective_term:.3e}s "
               f"-> {record.bottleneck}-bound "
               f"(useful-FLOPs ratio {record.useful_flops_ratio:.2f})")
+    return DryrunArtifacts(
+        arch=arch, shape_name=shape_name, mesh_name=_mesh_name(mesh),
+        step_kind=step_kind, num_chips=num_chips, cfg=cfg, shape=shape,
+        record=record, lowered=lowered, compiled=compiled,
+        compile_seconds=elapsed)
+
+
+def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+                mesh=None, num_groups: int = 4, microbatches: int = 1,
+                fsdp: bool = True, verbose: bool = True,
+                rc: RobustConfig | None = None, schedule=None,
+                return_artifacts: bool = False):
+    """Lower+compile one (arch, shape, mesh); returns a RooflineRecord.
+
+    Thin wrapper over :func:`lower_pair` kept for the original CLI/record
+    contract; pass ``return_artifacts=True`` for (record, lowered, compiled).
+    """
+    art = lower_pair(arch, shape_name, multi_pod=multi_pod, mesh=mesh,
+                     num_groups=num_groups, microbatches=microbatches,
+                     fsdp=fsdp, rc=rc, schedule=schedule, verbose=verbose)
     if return_artifacts:
-        return record, lowered, compiled
-    return record
+        return art.record, art.lowered, art.compiled
+    return art.record
 
 
 def main(argv=None):
@@ -151,6 +278,10 @@ def main(argv=None):
     p.add_argument("--no-fsdp", action="store_true")
     p.add_argument("--out", default=None, help="write JSON records here")
     args = p.parse_args(argv)
+
+    # entry-point guard: the production meshes need 512 host devices; this
+    # must NOT happen at import time (see module docstring).
+    force_host_device_count(DEFAULT_HOST_DEVICE_COUNT)
 
     pairs = []
     if args.all:

@@ -73,11 +73,8 @@ def main(argv=None):
     if args.scale == "cpu":
         serve_cpu(args)
     else:
-        import os
-        if "XLA_FLAGS" not in os.environ:
-            raise SystemExit("pod scale: run python -m repro.launch.dryrun "
-                             f"--arch {args.arch} --shape {args.shape}")
         from repro.launch import dryrun
+        dryrun.force_host_device_count()
         dryrun.dryrun_pair(args.arch, args.shape, multi_pod=args.multi_pod)
 
 

@@ -12,7 +12,10 @@ Two gradient paths implement the paper's Algorithm 2 (DESIGN.md §4):
   (k, P) with the 2D param layout preserved.  Byzantine corruption is
   injected at batch-mean granularity — exactly the quantity the analysis
   bounds (at most q of k batches contaminated).  This is the path the
-  512-chip dry-run lowers.
+  512-chip dry-run and the multi-pod scenario sweep (repro.sim.sweep)
+  lower; aggregation dispatches through the registry
+  (robust_train.aggregate_reported), so rc.aggregator / rc.round_backend /
+  an optional AttackSchedule are all first-class here.
 
 ``input_specs`` provides ShapeDtypeStruct stand-ins for every model input —
 weak-type-correct, shardable, no device allocation.
@@ -30,9 +33,7 @@ import jax.numpy as jnp
 from repro.configs import get_config, get_shape, long_context_variant
 from repro.configs.base import InputShape, ModelConfig
 from repro.core import RobustConfig, byzantine
-from repro.core.geometric_median import (batch_mean_norms,
-                                         geometric_median_pytree,
-                                         trim_weights)
+from repro.core.robust_train import aggregate_reported
 from repro.models import model as model_lib
 
 
@@ -126,7 +127,8 @@ def abstract_opt_state(optimizer, params_struct):
 # steps
 
 def make_group_train_step(cfg: ModelConfig, rc: RobustConfig, optimizer, *,
-                          microbatches: int = 1, grad_shardings=None):
+                          microbatches: int = 1, grad_shardings=None,
+                          schedule: byzantine.AttackSchedule | None = None):
     """Group-mode robust train step (the production/dry-run path).
 
     rc.num_workers is interpreted as k (the number of batches); the attack
@@ -134,6 +136,22 @@ def make_group_train_step(cfg: ModelConfig, rc: RobustConfig, optimizer, *,
     ``grad_shardings`` (optional pytree of NamedSharding for the stacked
     (k, *param) gradients) anchors the scan output so the cross-data
     gradient reduction lowers as reduce-scatter into the optimizer layout.
+
+    Aggregation dispatches through ``robust_train.aggregate_reported`` —
+    the same registry path the scenario engine uses — so ``rc.aggregator``
+    (gmom / mean / trimmed_mean / krum / ...) and ``rc.round_backend`` (the
+    fused Pallas round kernel vs the jnp reference) are first-class here,
+    not pinned to the inline gmom pipeline this step used to hard-code.
+    With ``rc.num_batches == k`` the gmom grouping is the identity (each
+    batch-group mean is its own "batch"), reproducing the historical
+    trim + Weiszfeld tail value for value.
+
+    ``schedule`` threads a multi-round ``AttackSchedule`` through the step
+    (the pod-sweep path: attack × schedule at batch-mean granularity).
+    When given, the step signature gains the adversary's carried state:
+    ``train_step(params, opt_state, batch, key, round_index, attack_state)
+    -> (params, opt_state, metrics, attack_state)``; without it the
+    historical 5-arg signature is unchanged.
     """
     k = rc.num_workers
 
@@ -165,7 +183,7 @@ def make_group_train_step(cfg: ModelConfig, rc: RobustConfig, optimizer, *,
     attack = byzantine.get_attack(rc.attack)
     attack_kwargs = dict(rc.attack_kwargs)
 
-    def train_step(params, opt_state, batch, key, round_index):
+    def _step_core(params, opt_state, batch, key, round_index, attack_state):
         # sequential scan over the k batch-groups (gradient accumulation
         # with per-group gradients kept separate): one group's activations
         # live at a time, and shard_map regions (MoE EP) stay legal.  Each
@@ -177,17 +195,15 @@ def make_group_train_step(cfg: ModelConfig, rc: RobustConfig, optimizer, *,
         _, (losses, grads) = jax.lax.scan(group_step, None, batch)
         if grad_shardings is not None:
             grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
-        mask = byzantine.sample_byzantine_mask(
-            key, k, rc.num_byzantine, rotate=rc.rotate_byzantine,
-            round_index=round_index)
-        reported = attack(grads, mask, key, **attack_kwargs)
-        weights = None
-        if rc.trim_multiplier is not None:
-            norms = batch_mean_norms(reported)
-            weights = trim_weights(norms, multiplier=rc.trim_multiplier)
-        agg = geometric_median_pytree(
-            reported, weights=weights, max_iters=rc.gmom_max_iters,
-            tol=rc.gmom_tol)
+        if schedule is None:
+            mask = byzantine.sample_byzantine_mask(
+                key, k, rc.num_byzantine, rotate=rc.rotate_byzantine,
+                round_index=round_index)
+            reported = attack(grads, mask, key, **attack_kwargs)
+        else:
+            reported, mask, attack_state = schedule.apply(
+                grads, key, round_index, attack_state)
+        agg = aggregate_reported(reported, rc, key=key)
         updates, opt_state = optimizer.update(agg, opt_state, params)
         params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
                               params, updates)
@@ -195,8 +211,20 @@ def make_group_train_step(cfg: ModelConfig, rc: RobustConfig, optimizer, *,
                              for g in jax.tree.leaves(agg)))
         metrics = {"loss_mean": jnp.mean(losses),
                    "loss_median": jnp.median(losses),
-                   "agg_grad_norm": gnorm}
-        return params, opt_state, metrics
+                   "agg_grad_norm": gnorm,
+                   "byz_count": jnp.sum(mask.astype(jnp.int32))}
+        return params, opt_state, metrics, attack_state
+
+    if schedule is None:
+        def train_step(params, opt_state, batch, key, round_index):
+            params, opt_state, metrics, _ = _step_core(
+                params, opt_state, batch, key, round_index, None)
+            return params, opt_state, metrics
+    else:
+        def train_step(params, opt_state, batch, key, round_index,
+                       attack_state):
+            return _step_core(params, opt_state, batch, key, round_index,
+                              attack_state)
 
     return train_step
 

@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
 
 import jax
@@ -159,6 +158,9 @@ def train_cpu(args) -> dict:
 
 def train_pod(args):
     from repro.launch import dryrun
+    # dryrun no longer forces the 512 virtual host devices at import time;
+    # arm the flag explicitly before the first backend init.
+    dryrun.force_host_device_count()
     rec = dryrun.dryrun_pair(args.arch, "train_4k",
                              multi_pod=args.multi_pod,
                              num_groups=args.num_batches or 4,
@@ -202,10 +204,8 @@ def main(argv=None):
     if args.scale == "cpu":
         train_cpu(args)
     else:
-        if "XLA_FLAGS" not in os.environ:
-            raise SystemExit(
-                "pod scale requires the dry-run device flag; run "
-                "python -m repro.launch.dryrun instead (it sets XLA_FLAGS).")
+        # train_pod arms the 512 virtual host devices itself
+        # (dryrun.force_host_device_count) — no pre-set XLA_FLAGS needed.
         train_pod(args)
 
 

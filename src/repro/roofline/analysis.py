@@ -171,6 +171,31 @@ def build_record(*, arch: str, shape, cfg, mesh_name: str, num_chips: int,
     )
 
 
+def sweep_entry(record: RooflineRecord, *, scenario: str) -> dict:
+    """Per-scenario collective-cost record entry for the pod-sweep gate.
+
+    The JSON-stable projection of a RooflineRecord keyed by scenario name:
+    everything ``repro.sim.sweep``'s ``--check`` compares (total collective
+    bytes, per-collective breakdown, compiled peak memory) plus the roofline
+    context needed to read the record without re-deriving the setup.
+    """
+    return {
+        "scenario": scenario,
+        "arch": record.arch,
+        "shape": record.shape,
+        "mesh": record.mesh,
+        "step": record.step,
+        "num_chips": record.num_chips,
+        "collective_bytes_per_device": record.collective_bytes_per_device,
+        "collective_breakdown": dict(record.collective_breakdown),
+        "peak_memory_bytes": record.peak_memory_bytes,
+        "flops_per_device": record.flops_per_device,
+        "bytes_per_device": record.bytes_per_device,
+        "collective_term": record.collective_term,
+        "bottleneck": record.bottleneck,
+    }
+
+
 def format_table(records: list[RooflineRecord]) -> str:
     header = ("| arch | shape | mesh | step | compute s | memory s | "
               "collective s | bottleneck | useful-FLOPs | peak GiB/chip |")

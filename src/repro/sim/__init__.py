@@ -7,6 +7,12 @@ checked-in golden metric traces for regression testing.
 
     from repro import sim
     trace = sim.run_scenario("linreg/gmom/sign_flip/stealth_then_strike")
+
+The production-mesh counterpart is ``repro.sim.sweep``: the same
+attack × schedule × aggregator matrix bound to (arch, shape, mesh) triples
+(``PodScenario``), dry-run-lowered on the 16×16 / 2×16×16 meshes, with
+per-scenario collective costs gated against benchmarks/BENCH_pod_sweeps.json
+(``python -m repro.sim.sweep --check``).
 """
 
 from repro.sim.engine import (  # noqa: F401
@@ -22,4 +28,4 @@ from repro.sim.scenarios import (  # noqa: F401
     golden_scenarios,
     register,
 )
-from repro.sim import goldens  # noqa: F401
+from repro.sim import goldens, sweep  # noqa: F401

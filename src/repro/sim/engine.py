@@ -44,6 +44,11 @@ def _build_run(sc: Scenario, *, round_backend: str = "auto"):
     reference pipeline on CPU — the path every golden trace is recorded
     on — and the fused Pallas round kernel on TPU; tests force
     ``fused_interpret`` to replay goldens through the kernel."""
+    if sc.arch != "linreg":
+        raise NotImplementedError(
+            f"scenario {sc.name!r} targets arch {sc.arch!r}: the end-to-end "
+            "engine only runs the linreg substrate; production architectures "
+            "go through the dry-run pod sweep (repro.sim.sweep)")
     key = jax.random.PRNGKey(sc.seed)
     ds = regression.generate(key, dim=sc.dim, total_samples=sc.total_samples,
                              num_workers=sc.num_workers,

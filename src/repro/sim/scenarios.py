@@ -23,6 +23,14 @@ import math
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     name: str
+    # which substrate realizes the scenario: "linreg" (the paper's §4
+    # testbed, run end-to-end by repro.sim.engine) or any architecture id
+    # from repro.configs.ARCHITECTURES.  Production architectures are
+    # exercised through the dry-run pod sweep (repro.sim.sweep.PodScenario
+    # binds the same attack/schedule/aggregator axes to an (arch, shape,
+    # mesh) triple); engine.run_scenario rejects them until the LM-substrate
+    # golden workflow lands (ROADMAP "Scenario engine on LM substrates").
+    arch: str = "linreg"
     aggregator: str = "gmom"
     attack: str = "sign_flip"
     schedule: str = "rotating"

@@ -1,0 +1,432 @@
+"""Multi-pod scenario sweep: attack × schedule × aggregator on the
+production meshes, as a collective-cost regression gate.
+
+The linreg scenario engine (``repro.sim.engine``) answers "does the
+*statistics* hold up" — convergence under every adversary campaign.  This
+module answers the systems half of the ROADMAP item: the group-mode
+production train step that actually implements the geometric-median-of-means
+path (paper Algorithm 1/2, §5 cost model) is lowered + compiled through
+``repro.launch.dryrun.lower_pair`` for every cell of the
+attack × schedule × aggregator matrix on the 16×16 (256-chip) and 2×16×16
+(512-chip) meshes, and the per-scenario **collective bytes / per-collective
+breakdown / compiled peak memory** (extracted by the roofline machinery from
+the partitioned HLO — no real training runs) are recorded in a checked-in
+``benchmarks/BENCH_pod_sweeps.json``.
+
+A :class:`PodScenario` is the production-mesh generalization of
+``repro.sim.scenarios.Scenario``: instead of pinning the linreg testbed it
+binds (attack, schedule, aggregator, round_backend) to an *(arch, shape,
+mesh)* triple — any architecture config from ``repro.configs``.
+
+Usage::
+
+    # sweep every registered scenario (both meshes) and write the
+    # checked-in record benchmarks/BENCH_pod_sweeps.json
+    PYTHONPATH=src python -m repro.sim.sweep --all
+
+    # regression gate (the CI slow lane): re-lower everything and fail
+    # when any scenario's collective bytes or compiled memory regressed
+    # beyond tolerance vs the checked-in record
+    PYTHONPATH=src python -m repro.sim.sweep --check
+
+    # one cell, verbose
+    PYTHONPATH=src python -m repro.sim.sweep \\
+        --scenario pod/16x16/minitron-4b/gmom/alie/rotating
+
+``--check`` exits non-zero on: a regression beyond tolerance, a registered
+scenario missing from the record, or a stale record entry whose scenario is
+no longer registered.  Improvements beyond tolerance are reported as notes
+(re-record with ``--all`` to ratchet the gate down).  ``scripts/check_docs.py``
+separately fails tier-1 when a registered scenario or mesh is missing from
+the checked-in record, so the registry and the record cannot drift apart
+silently.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+from repro.core import RobustConfig, byzantine
+
+# ---------------------------------------------------------------------------
+# the matrix
+
+POD_ATTACKS = ("sign_flip", "alie", "norm_stealth")
+POD_SCHEDULES = ("static", "rotating", "stealth_then_strike")
+POD_AGGREGATORS = ("gmom", "mean", "trimmed_mean")
+POD_MESHES = ("16x16", "2x16x16")
+
+#: mesh name -> multi_pod flag for launch.mesh.make_production_mesh
+MESH_MULTI_POD = {"16x16": False, "2x16x16": True}
+
+DEFAULT_ARCH = "minitron-4b"    # smallest dense production config: the
+DEFAULT_SHAPE = "train_4k"      # cheapest full-size compile per cell
+
+REPO_ROOT = os.path.abspath(os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "..", ".."))
+BENCH_PATH = os.path.join(REPO_ROOT, "benchmarks", "BENCH_pod_sweeps.json")
+
+RTOL_COLLECTIVE = 0.05   # collective bytes are deterministic per jax version
+RTOL_MEMORY = 0.25       # memory_analysis drifts more across XLA versions
+ATOL_BYTES = 4096        # ignore sub-page jitter
+
+
+@dataclasses.dataclass(frozen=True)
+class PodScenario:
+    """One cell of the production-mesh sweep.
+
+    Binds the adversarial degrees of freedom (attack, schedule, aggregator,
+    round_backend, fault geometry) to an (arch, shape, mesh) triple.  The
+    Byzantine granularity is the batch-group mean — exactly the quantity the
+    paper's analysis bounds (at most q of k batches contaminated; see
+    ``launch.steps`` group mode).
+    """
+    name: str
+    aggregator: str = "gmom"
+    attack: str = "sign_flip"
+    schedule: str = "rotating"
+    mesh: str = "16x16"
+    arch: str = DEFAULT_ARCH
+    shape: str = DEFAULT_SHAPE
+    round_backend: str = "auto"
+    num_groups: int = 4          # k — batch-group count
+    num_byzantine: int = 1       # q — contaminated batch means per round
+    microbatches: int = 1
+
+    def robust_config(self) -> RobustConfig:
+        """The injected aggregation pipeline config (num_batches == k: each
+        batch-group gradient is its own batch mean)."""
+        return RobustConfig(
+            num_workers=self.num_groups, num_byzantine=self.num_byzantine,
+            num_batches=self.num_groups, aggregator=self.aggregator,
+            attack=self.attack, round_backend=self.round_backend,
+            gmom_max_iters=8)
+
+    def build_schedule(self) -> byzantine.AttackSchedule:
+        return byzantine.make_schedule(
+            self.schedule, num_workers=self.num_groups,
+            num_byzantine=self.num_byzantine, attack=self.attack)
+
+
+_REGISTRY: dict[str, PodScenario] = {}
+
+
+def register(ps: PodScenario) -> PodScenario:
+    if ps.name in _REGISTRY:
+        raise ValueError(f"pod scenario {ps.name!r} already registered")
+    if ps.mesh not in MESH_MULTI_POD:
+        raise ValueError(f"unknown mesh {ps.mesh!r}; have "
+                         f"{sorted(MESH_MULTI_POD)}")
+    _REGISTRY[ps.name] = ps
+    return ps
+
+
+def get_pod_scenario(name: str) -> PodScenario:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown pod scenario {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def _n(mesh: str, arch: str, agg: str, attack: str, schedule: str) -> str:
+    return f"pod/{mesh}/{arch}/{agg}/{attack}/{schedule}"
+
+
+# The full matrix, both meshes.  Every cell lowers the REAL group-mode train
+# step — the attack and schedule trace into the compiled module (alie's
+# honest-statistics reads, stealth_then_strike's lax.cond on its EMA state),
+# and the aggregator decides the collective schedule the gate watches.
+for _mesh in POD_MESHES:
+    for _agg in POD_AGGREGATORS:
+        for _attack in POD_ATTACKS:
+            for _schedule in POD_SCHEDULES:
+                register(PodScenario(
+                    name=_n(_mesh, DEFAULT_ARCH, _agg, _attack, _schedule),
+                    aggregator=_agg, attack=_attack, schedule=_schedule,
+                    mesh=_mesh))
+
+
+# ---------------------------------------------------------------------------
+# lowering one cell
+
+def lower_scenario(ps: PodScenario, *, mesh=None, cfg=None, shape=None,
+                   verbose: bool = False) -> dict:
+    """Lower + compile one PodScenario; returns its sweep record entry.
+
+    ``mesh``/``cfg``/``shape`` inject a small host-device mesh, a reduced
+    config, and a small registered input shape (the tier-1 test path); by
+    default the scenario's production mesh and full-size architecture are
+    used — the caller is responsible for arming enough host devices first
+    (``main`` does).
+    """
+    from repro.launch import dryrun
+    from repro.roofline import analysis
+
+    art = dryrun.lower_pair(
+        cfg if cfg is not None else ps.arch, shape or ps.shape,
+        multi_pod=MESH_MULTI_POD[ps.mesh], mesh=mesh,
+        num_groups=ps.num_groups, microbatches=ps.microbatches,
+        rc=ps.robust_config(), schedule=ps.build_schedule(),
+        verbose=verbose)
+    entry = analysis.sweep_entry(art.record, scenario=ps.name)
+    entry.update(
+        aggregator=ps.aggregator, attack=ps.attack, schedule=ps.schedule,
+        round_backend=ps.round_backend, num_groups=ps.num_groups,
+        num_byzantine=ps.num_byzantine,
+        compile_seconds=round(art.compile_seconds, 2))
+    return entry
+
+
+def run_sweep(names: list[str] | None = None, *,
+              verbose: bool = True) -> dict:
+    """Lower every named (default: all registered) scenario; returns the
+    sweep payload (the BENCH record body)."""
+    names = available() if names is None else list(names)
+    scenarios: dict[str, dict] = {}
+    t0 = time.time()
+    for i, name in enumerate(names):
+        ps = get_pod_scenario(name)
+        entry = lower_scenario(ps)
+        scenarios[name] = entry
+        if verbose:
+            print(f"[sweep {i + 1}/{len(names)}] {name}: "
+                  f"coll={entry['collective_bytes_per_device']:.3e} B "
+                  f"peak={entry['peak_memory_bytes'] or 0:.3e} B "
+                  f"({entry['compile_seconds']:.1f}s)", flush=True)
+    payload = {
+        "matrix": {
+            "attacks": list(POD_ATTACKS),
+            "schedules": list(POD_SCHEDULES),
+            "aggregators": list(POD_AGGREGATORS),
+            "meshes": list(POD_MESHES),
+        },
+        "default_arch": DEFAULT_ARCH,
+        "default_shape": DEFAULT_SHAPE,
+        "sweep_seconds": round(time.time() - t0, 1),
+        "scenarios": scenarios,
+    }
+    return payload
+
+
+# ---------------------------------------------------------------------------
+# the regression gate
+
+def _rel_over(new: float, old: float, rtol: float, atol: float) -> bool:
+    return new > old * (1.0 + rtol) + atol
+
+
+def compare_payloads(record: dict, fresh: dict, *,
+                     rtol_collective: float = RTOL_COLLECTIVE,
+                     rtol_memory: float = RTOL_MEMORY,
+                     atol: float = ATOL_BYTES) -> tuple[list[str], list[str]]:
+    """Gate a fresh sweep against the checked-in record.
+
+    Returns ``(problems, notes)``: problems fail the gate (collective-bytes
+    or peak-memory regression beyond tolerance, registered scenario missing
+    from the record, stale record entry); notes are informational
+    (improvements beyond tolerance — re-record to ratchet — and per-op
+    breakdown drift inside the total tolerance).
+    """
+    problems: list[str] = []
+    notes: list[str] = []
+    old_s = record.get("scenarios", {})
+    new_s = fresh.get("scenarios", {})
+
+    for name in sorted(new_s):
+        if name not in old_s:
+            problems.append(
+                f"{name}: not in the checked-in record — re-record with "
+                "`python -m repro.sim.sweep --all` and commit the diff")
+            continue
+        old, new = old_s[name], new_s[name]
+        for field, rtol, label in (
+                ("collective_bytes_per_device", rtol_collective,
+                 "collective bytes"),
+                ("peak_memory_bytes", rtol_memory, "compiled peak memory")):
+            o, n = old.get(field), new.get(field)
+            if o is None or n is None:
+                continue
+            if _rel_over(n, o, rtol, atol):
+                problems.append(
+                    f"{name}: {label} regressed {o:.4e} -> {n:.4e} "
+                    f"(+{(n - o) / max(o, 1.0):.1%} > rtol {rtol:.0%})")
+            elif _rel_over(o, n, rtol, atol):
+                notes.append(
+                    f"{name}: {label} improved {o:.4e} -> {n:.4e} — "
+                    "re-record (--all) to ratchet the gate")
+        ob = old.get("collective_breakdown", {})
+        nb = new.get("collective_breakdown", {})
+        for op in sorted(set(ob) | set(nb)):
+            o, n = float(ob.get(op, 0.0)), float(nb.get(op, 0.0))
+            if _rel_over(n, o, rtol_collective, atol) or \
+                    _rel_over(o, n, rtol_collective, atol):
+                notes.append(
+                    f"{name}: {op} bytes moved {o:.4e} -> {n:.4e} "
+                    "(total within tolerance)")
+
+    for name in sorted(set(old_s) - set(new_s)):
+        problems.append(
+            f"{name}: stale record entry (scenario no longer swept) — "
+            "re-record with `python -m repro.sim.sweep --all`")
+    return problems, notes
+
+
+def load_record(path: str = BENCH_PATH) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _save_bench(payload: dict, path: str = BENCH_PATH) -> str:
+    """Write the sweep record, stamped with backend/jax-version metadata
+    (collective bytes are only comparable within a jax version).
+
+    The canonical checked-in path goes through benchmarks.common.save_bench;
+    a custom ``path`` (``--record-path``) gets the same record shape without
+    touching the committed file."""
+    if os.path.abspath(path) != BENCH_PATH:
+        import jax
+        record = {
+            "bench": "pod_sweeps",
+            "recorded_unix": int(time.time()),
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "cpu_count": os.cpu_count(),
+            **payload,
+        }
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+            f.write("\n")
+        return path
+    try:
+        from benchmarks.common import save_bench
+    except ImportError:
+        sys.path.insert(0, REPO_ROOT)
+        from benchmarks.common import save_bench
+    return save_bench("pod_sweeps", payload)
+
+
+def _format_entries(scenarios: dict[str, dict]) -> str:
+    rows = ["| scenario | mesh | collective B/dev | peak B/chip | "
+            "bottleneck |", "|---|---|---|---|---|"]
+    for name in sorted(scenarios):
+        e = scenarios[name]
+        peak = (f"{e['peak_memory_bytes']:.3e}"
+                if e.get("peak_memory_bytes") else "n/a")
+        rows.append(
+            f"| {name} | {e['mesh']} "
+            f"| {e['collective_bytes_per_device']:.3e} | {peak} "
+            f"| {e['bottleneck']} |")
+    return "\n".join(rows)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    p.add_argument("--all", action="store_true",
+                   help="sweep every registered scenario and write the "
+                        "checked-in benchmarks/BENCH_pod_sweeps.json")
+    p.add_argument("--scenario", action="append", default=[],
+                   help="sweep one named scenario (repeatable)")
+    p.add_argument("--multi-pod", action="store_true",
+                   help="restrict to the 2x16x16 mesh half of the matrix")
+    p.add_argument("--single-pod", action="store_true",
+                   help="restrict to the 16x16 mesh half of the matrix")
+    p.add_argument("--check", action="store_true",
+                   help="re-sweep and fail on regressions vs the checked-in "
+                        "record (the CI slow-lane gate)")
+    p.add_argument("--record-path", default=BENCH_PATH,
+                   help="checked-in record to gate against / write")
+    p.add_argument("--fresh-from", default=None,
+                   help="with --check: read the fresh sweep payload from "
+                        "this JSON instead of lowering (CI wiring tests / "
+                        "split run-vs-gate)")
+    p.add_argument("--out", default=None,
+                   help="write the fresh sweep payload (scratch JSON)")
+    p.add_argument("--rtol-collective", type=float, default=RTOL_COLLECTIVE)
+    p.add_argument("--rtol-memory", type=float, default=RTOL_MEMORY)
+    args = p.parse_args(argv)
+
+    names = available()
+    if args.multi_pod:
+        names = [n for n in names if get_pod_scenario(n).mesh == "2x16x16"]
+    if args.single_pod:
+        names = [n for n in names if get_pod_scenario(n).mesh == "16x16"]
+    if args.scenario:
+        for n in args.scenario:
+            get_pod_scenario(n)   # fail fast on typos
+        names = args.scenario
+    elif not (args.all or args.check):
+        p.error("pass --all, --check, or --scenario NAME")
+    filtered = bool(args.multi_pod or args.single_pod or args.scenario)
+
+    if args.fresh_from:
+        with open(args.fresh_from) as f:
+            fresh = json.load(f)
+    else:
+        # the production meshes need 512 host devices; arm the flag before
+        # jax's backend initializes (entry-point guard, NOT import-time).
+        from repro.launch import dryrun
+        dryrun.force_host_device_count(512)
+        fresh = run_sweep(names)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(fresh, f, indent=1)
+        print(f"wrote fresh sweep payload to {args.out}")
+
+    if args.check:
+        if not os.path.exists(args.record_path):
+            print(f"sweep --check: no record at {args.record_path} — "
+                  "record one with `python -m repro.sim.sweep --all`")
+            return 2
+        record = load_record(args.record_path)
+        if filtered:
+            # a filtered gate run (--single-pod / --multi-pod / --scenario)
+            # only compares the swept subset: record entries outside the
+            # filter are out of scope, not stale.  Registry/record drift is
+            # enforced by unfiltered --check (and by check_docs in tier-1).
+            swept = set(names)
+            record = dict(record)
+            record["scenarios"] = {
+                n: e for n, e in record.get("scenarios", {}).items()
+                if n in swept}
+        problems, notes = compare_payloads(
+            record, fresh,
+            rtol_collective=args.rtol_collective,
+            rtol_memory=args.rtol_memory)
+        for n in notes:
+            print(f"sweep note: {n}")
+        for pr in problems:
+            print(f"sweep REGRESSION: {pr}")
+        if problems:
+            print(f"sweep --check: FAILED ({len(problems)} problem(s))")
+            return 1
+        print(f"sweep --check: ok — {len(fresh.get('scenarios', {}))} "
+              "scenario(s) within tolerance of the checked-in record")
+        return 0
+
+    print()
+    print(_format_entries(fresh["scenarios"]))
+    if args.all:
+        path = _save_bench(fresh, args.record_path)
+        if os.path.abspath(args.record_path) == BENCH_PATH:
+            print(f"\nwrote checked-in record {path} — commit it with "
+                  "the PR")
+        else:
+            print(f"\nwrote record {path} (scratch — the checked-in gate "
+                  f"record stays {BENCH_PATH})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

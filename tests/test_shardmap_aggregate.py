@@ -1,5 +1,7 @@
 """make_shardmap_aggregate (hand-scheduled GMoM collectives) vs the GSPMD
-``aggregate`` path on a fake 8-device CPU mesh — leaf-for-leaf equality.
+``aggregate`` path on a fake 8-device CPU mesh — leaf-for-leaf equality,
+on both the reference jnp tail and the fused round-kernel backend
+(``round_backend="fused_interpret"``: the Pallas kernel in interpret mode).
 
 Runs in a subprocess because the virtual-device flag must be set before jax
 initializes (same pattern as test_parallel_numerics)."""
@@ -61,6 +63,31 @@ SCRIPT = textwrap.dedent("""
         assert a.shape == b.shape == c.shape, (a.shape, b.shape, c.shape)
         assert float(jnp.max(jnp.abs(a - b))) < 1e-5, "gspmd vs shard_map"
         assert float(jnp.max(jnp.abs(b - c))) < 1e-5, "shard_map vs oracle"
+
+    # --- fused backend: the PR-3 round kernel dispatched through
+    # RobustConfig.round_backend (the trim+Weiszfeld tail runs in the Pallas
+    # interpreter on the psum'd means; identity k=m grouping in-kernel)
+    import dataclasses
+    cfg_fused = dataclasses.replace(cfg, round_backend="fused_interpret")
+    agg_fused = make_shardmap_aggregate(cfg_fused, mesh)
+    fn_fused = shard_map(
+        lambda s: agg_fused(jax.tree.map(lambda x: x[0], s)),
+        mesh=mesh, in_specs=(specs,), out_specs=out_specs, check_rep=False)
+    handsched_fused = jax.jit(fn_fused)(stacked)
+
+    oracle_fused = aggregators.gmom_aggregator(
+        stacked, num_batches=k, num_byzantine=1,
+        trim_multiplier=cfg.trim_multiplier, max_iters=cfg.gmom_max_iters,
+        tol=cfg.gmom_tol, round_backend="fused_interpret")
+
+    for b, f, of in zip(jax.tree.leaves(handsched),
+                        jax.tree.leaves(handsched_fused),
+                        jax.tree.leaves(oracle_fused)):
+        assert b.shape == f.shape == of.shape, (b.shape, f.shape, of.shape)
+        assert float(jnp.max(jnp.abs(f - b))) < 1e-5, \\
+            "fused shard_map vs reference shard_map"
+        assert float(jnp.max(jnp.abs(f - of))) < 1e-5, \\
+            "fused shard_map vs fused oracle"
     print("OK")
 """)
 
