@@ -10,6 +10,12 @@ selection rules and compare them with the geometric median."
 We implement both (core/aggregators.py) and compare against GMoM under
 (a) a large-norm attack (sign_flip ×10), (b) the small-norm omniscient
 inner-product attack, (c) no attack (statistical efficiency).
+
+The sound combined selection rules (`coord_median`, `coord_trimmed_mean`,
+`norm_filter_gmom` — the defense-gap fix) join the comparison under the
+full small-norm suite (alie, norm_stealth, inner_product) to demonstrate
+empirically what the defense matrix asserts: they converge where the naive
+§6 rules diverge.
 """
 
 from __future__ import annotations
@@ -17,6 +23,12 @@ from __future__ import annotations
 from benchmarks.common import run_linreg, save_json
 
 DIM, N, M, Q = 50, 40_000, 20, 3
+
+#: aggregators that run the batched (k = 10) pipeline; the naive selection
+#: rules operate on the raw m reports (k = m, no batching to hide in).
+BATCHED = ("gmom", "coord_median", "coord_trimmed_mean", "norm_filter_gmom")
+SOUND_COMBINED = ("coord_median", "coord_trimmed_mean", "norm_filter_gmom")
+SMALL_NORM_ATTACKS = ("alie", "norm_stealth", "inner_product")
 
 
 def main() -> list[dict]:
@@ -33,12 +45,18 @@ def main() -> list[dict]:
         ("random_select", "inner_product"),
         ("norm_select", "inner_product"),  # FAILS: attack has SMALL norms
     ]
+    # the sound combined rules: efficiency, the classic large-norm attack,
+    # and the full small-norm suite that defeats the naive rules.
+    for agg in SOUND_COMBINED:
+        cases.append((agg, "none"))
+        cases.append((agg, "sign_flip"))
+        cases.extend((agg, attack) for attack in SMALL_NORM_ATTACKS)
     for aggregator, attack in cases:
         errs, _ = run_linreg(
             dim=DIM, total_samples=N, num_workers=M, num_byzantine=Q,
-            num_batches=(10 if aggregator == "gmom" else M),
+            num_batches=(10 if aggregator in BATCHED else M),
             attack=attack, aggregator=aggregator, rounds=40,
-            trim_multiplier=(3.0 if aggregator == "gmom" else None))
+            trim_multiplier=(3.0 if aggregator in BATCHED else None))
         rows.append({"aggregator": aggregator, "attack": attack,
                      "final_error": errs[-1],
                      "converged": bool(errs[-1] < 1.0)})

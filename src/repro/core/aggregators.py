@@ -17,10 +17,25 @@ well-known robust baselines used for the comparison benchmarks:
                           the smallest sum of distances to its m-q-2 closest.
 * ``norm_clip_mean``    — mean of norm-clipped gradients (practical baseline)
 
-Every ``register(...)`` call carries a one-line description; ``describe()``
-renders the registry as a markdown table (the one in README.md), and
-``scripts/check_docs.py`` fails CI when a registered name is missing from
-``docs/PAPER_MAP.md`` or has an empty description.
+The naive paper-§6 selection rules (``random_select``, ``norm_select``,
+and the ``norm_clip_mean`` baseline) are KNOWN-UNSOUND under the adaptive
+small-norm attacks; the **sound combined selection rules** close that gap
+(see the section comment above their definitions):
+
+* ``coord_median``       — coordinate-wise median of the k batch means
+                           [Yin et al. '18]
+* ``coord_trimmed_mean`` — coordinate-wise q-trimmed mean of the k batch
+                           means [Yin et al. '18]
+* ``norm_filter_gmom``   — two-sided norm-envelope filter (median ± c·MAD,
+                           dropping huge AND adversarially-small outliers)
+                           then GMoM on the survivors [Su & Xu '18]
+
+Every ``register(...)`` call carries a one-line description plus the
+kwarg-dispatch flags (``needs_num_byzantine`` / ``needs_key`` /
+``needs_grouping``) that ``robust_train.aggregate_reported`` reads;
+``describe()`` renders the registry as a markdown table (the one in
+README.md), and ``scripts/check_docs.py`` fails CI when a registered name
+is missing from ``docs/PAPER_MAP.md`` or has an empty description.
 
 ``gmom`` dispatches its hot path through ``round_backend``:
 
@@ -59,17 +74,41 @@ _REGISTRY: dict[str, "Aggregator"] = {}
 
 @dataclasses.dataclass(frozen=True)
 class Aggregator:
+    """Registry entry: the aggregation fn plus the kwarg-dispatch metadata
+    ``robust_train.aggregate_reported`` reads.  The flags replace the old
+    hardcoded aggregator-name lists: a newly registered rule declares what
+    it consumes and the engine threads it — no dispatch-site edits.
+
+    * ``needs_num_byzantine`` — receives ``num_byzantine=cfg.num_byzantine``.
+    * ``needs_key``           — receives a per-round PRNG ``key`` (randomized
+                                rules; the paper's omniscient adversary sees
+                                the same key).
+    * ``needs_grouping``      — receives the full batching/median bundle:
+                                ``num_batches``, ``epsilon``,
+                                ``grouping_scheme``, ``trim_multiplier``,
+                                ``max_iters``/``tol``, and ``round_backend``
+                                (rules that don't consume a field swallow it
+                                via ``**_kw``).
+    """
     name: str
     fn: AggregatorFn
     description: str = ""
+    needs_num_byzantine: bool = False
+    needs_key: bool = False
+    needs_grouping: bool = False
 
     def __call__(self, stacked_grads, **kw):
         return self.fn(stacked_grads, **kw)
 
 
-def register(name: str, description: str = ""):
+def register(name: str, description: str = "", *,
+             needs_num_byzantine: bool = False, needs_key: bool = False,
+             needs_grouping: bool = False):
     def deco(fn):
-        _REGISTRY[name] = Aggregator(name=name, fn=fn, description=description)
+        _REGISTRY[name] = Aggregator(
+            name=name, fn=fn, description=description,
+            needs_num_byzantine=needs_num_byzantine, needs_key=needs_key,
+            needs_grouping=needs_grouping)
         return fn
     return deco
 
@@ -213,7 +252,8 @@ def _total_dim(stacked) -> int:
 
 
 @register("gmom", "geometric median of means — the paper's Algorithm 2 "
-          "(fused Pallas round kernel on TPU, jnp reference elsewhere)")
+          "(fused Pallas round kernel on TPU, jnp reference elsewhere)",
+          needs_num_byzantine=True, needs_grouping=True)
 def gmom_aggregator(stacked_grads, *, num_batches: int | None = None,
                     num_byzantine: int = 0, epsilon: float = 0.1,
                     grouping_scheme: str = "contiguous",
@@ -273,7 +313,8 @@ def coordinate_median_aggregator(stacked_grads, **_kw):
 
 
 @register("trimmed_mean", "coordinate-wise beta-trimmed mean "
-          "[Yin et al. '18] — related-work baseline")
+          "[Yin et al. '18] — related-work baseline",
+          needs_num_byzantine=True)
 def trimmed_mean_aggregator(stacked_grads, *, trim_fraction: float = 0.1,
                             num_byzantine: int | None = None, **_kw):
     """Coordinate-wise mean after discarding the t largest and t smallest
@@ -293,14 +334,28 @@ def trimmed_mean_aggregator(stacked_grads, *, trim_fraction: float = 0.1,
 
 
 @register("krum", "Krum selection rule [BMGS17] — the paper's closest "
-          "related work; picks one whole gradient by distance score")
+          "related work; picks one whole gradient by distance score",
+          needs_num_byzantine=True)
 def krum_aggregator(stacked_grads, *, num_byzantine: int = 0, **_kw):
     """Krum (Blanchard et al. '17): return the single worker gradient with
     the smallest sum of squared distances to its m - q - 2 nearest
     neighbours.  Selects a *received* gradient verbatim rather than
     averaging — robust, but discards the variance reduction of honest
-    averaging the paper's GMoM keeps."""
+    averaging the paper's GMoM keeps.
+
+    Requires ``m > q + 2`` so every score sums at least one *other*
+    worker's distance; below that the neighbourhood is degenerate and
+    Krum's guarantee is void, so we raise rather than silently clamp
+    (mirroring the loud-validation style of ``RobustConfig``'s
+    q <= (m-1)/2 tolerance condition).
+    """
     m = _num_workers(stacked_grads)
+    closest = m - num_byzantine - 2
+    if closest < 1:
+        raise ValueError(
+            f"krum needs m > q + 2 workers (got m={m}, q={num_byzantine}): "
+            "the m - q - 2 nearest-neighbour score is degenerate and the "
+            "selection guarantee [BMGS17] is void")
     # pairwise squared distances accumulated leaf-by-leaf (never flattens).
     d2 = jnp.zeros((m, m), jnp.float32)
     for g in jax.tree.leaves(stacked_grads):
@@ -309,7 +364,6 @@ def krum_aggregator(stacked_grads, *, num_byzantine: int = 0, **_kw):
         d2 = d2 + (sq[:, None] + sq[None, :] - 2.0 * gf @ gf.T)
     d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf, jnp.float32))
     # score(i) = sum of the m - q - 2 smallest distances to others
-    closest = max(m - num_byzantine - 2, 1)
     sorted_d2 = jnp.sort(d2, axis=1)
     scores = jnp.sum(sorted_d2[:, :closest], axis=1)
     winner = jnp.argmin(scores)
@@ -354,17 +408,26 @@ def norm_clip_mean_aggregator(stacked_grads, *, clip_multiplier: float = 1.0,
 @register("random_select",
           "paper §6 rule 1: average a random subset of the gradients "
           "(defends only the RELAXED adversary that cannot see the "
-          "server's random bits — fails vs the paper's omniscient model)")
+          "server's random bits — fails vs the paper's omniscient model)",
+          needs_key=True)
 def random_select_aggregator(stacked_grads, *, key=None,
                              subset_fraction: float = 0.5, **_kw):
     """Average a uniformly random subset (paper §6, rule 1).  Only defends
     the RELAXED adversary: the paper's omniscient model sees the server's
     random bits (our attacks receive the same ``key``), adapts, and wins —
-    the §6 caveat the selection_rules benchmark demonstrates."""
+    the §6 caveat the selection_rules benchmark demonstrates.
+
+    ``key`` is required: the engine threads a fresh per-round key
+    (``needs_key`` registry flag).  The old ``PRNGKey(0)`` fallback made
+    the "random" subset deterministic and identical every round — a silent
+    downgrade to a fixed selection rule — so a missing key now raises."""
     m = _num_workers(stacked_grads)
     n_sel = max(int(subset_fraction * m), 1)
     if key is None:
-        key = jax.random.PRNGKey(0)
+        raise ValueError(
+            "random_select requires a PRNG key: without one the subset is "
+            "identical every round (the aggregate_reported registry "
+            "dispatch threads a fresh per-round key automatically)")
     scores = jax.random.uniform(key, (m,))
     sel = bottom_k_mask(scores, n_sel)     # exactly n_sel, even under ties
 
@@ -378,7 +441,8 @@ def random_select_aggregator(stacked_grads, *, key=None,
 @register("norm_select",
           "paper §6 rule 2: average the gradients with the smallest l2 "
           "norms — KNOWN-UNSOUND vs small-norm attacks (alie, "
-          "norm_stealth); see benchmarks/selection_rules")
+          "norm_stealth); see benchmarks/selection_rules",
+          needs_num_byzantine=True)
 def norm_select_aggregator(stacked_grads, *, num_byzantine: int = 0, **_kw):
     """Average the ``m - q`` smallest-norm gradients (paper §6, rule 2).
 
@@ -407,13 +471,217 @@ def norm_select_aggregator(stacked_grads, *, num_byzantine: int = 0, **_kw):
 
 
 # ---------------------------------------------------------------------------
+# SOUND combined selection rules — the paper §6 discussion made rigorous.
+#
+# PR 1's defense matrix proved the naive §6 selection rules above are NOT
+# bounded under the adaptive small-norm attacks (alie / norm_stealth /
+# inner_product): the adversary's crafted rows sit inside (or deliberately
+# below) the honest norm envelope and survive one-sided selection or
+# clipping.  The fix combines *filtering* with a rule that is itself
+# robust, per the two natural ingredients from the related work:
+#
+# * coordinate-wise median / trimmed mean over the k BATCH MEANS
+#   (Yin et al. '18, arXiv:1803.01498) — per-coordinate order statistics
+#   over a fixed partition: at most q of k batches are contaminated, and
+#   a per-coordinate median/trim over k values tolerates q < k/2 outliers
+#   regardless of their norms;
+# * a TWO-SIDED norm-envelope filter followed by GMoM (the filtering-style
+#   combined rule of Su & Xu '18, arXiv:1804.10140): drop reports whose
+#   norm deviates from the median norm by more than a MAD-scaled envelope
+#   — both the classic huge-norm outliers AND the adversarially-small ones
+#   (zero/stalling reports, small-scale inner_product) — then run the
+#   paper's geometric-median-of-means on the survivors.  The filter only
+#   ever *removes* outliers; boundedness never rests on it, because the
+#   GMoM stage already tolerates q < k/2 contaminated batch means.
+#
+# All three are in the ROBUST set of tests/test_defense_matrix.py and the
+# previously-skipped small-norm gap test asserts their bounded deviation.
+
+
+@register("coord_median",
+          "coordinate-wise median of the k batch means [Yin et al. '18] — "
+          "sound combined rule: per-coordinate order statistics are immune "
+          "to the small-norm attacks that break norm_select",
+          needs_num_byzantine=True, needs_grouping=True)
+def coord_median_aggregator(stacked_grads, *, num_batches: int | None = None,
+                            num_byzantine: int = 0, epsilon: float = 0.1,
+                            grouping_scheme: str = "contiguous", **_kw):
+    """Coordinate-wise median over the k batch means (Yin et al. '18).
+
+    Same batching discipline as ``gmom`` (fixed partition via
+    ``core.grouping``, so at most q of k batch means are contaminated per
+    round), but the median is marginal: each coordinate takes the median of
+    its k batch-mean values.  A crafted report can only move a coordinate
+    past the median by outnumbering the honest batches there — norm games
+    (hiding under / ranking below the honest envelope) buy the adversary
+    nothing, which is exactly the soundness the one-sided ``norm_select``
+    lacks.
+
+    Requires ``2q < k`` (the median's breakdown point): at q >= k/2 the
+    contaminated batch means can straddle the median and drag it
+    arbitrarily, so an out-of-guarantee configuration raises (same loud
+    policy as ``coord_trimmed_mean`` / ``krum``) instead of silently
+    emitting an adversary-dominated aggregate."""
+    m = _num_workers(stacked_grads)
+    if num_batches is None:
+        from repro.core.grouping import choose_num_batches
+        num_batches = choose_num_batches(m, num_byzantine, epsilon=epsilon)
+    if 2 * num_byzantine >= num_batches:
+        raise ValueError(
+            f"coord_median needs 2q < k batches (got q={num_byzantine}, "
+            f"k={num_batches}): the per-coordinate median's breakdown point "
+            "is crossed and the Yin et al. '18 guarantee is void — "
+            "increase num_batches or lower q")
+    means = batch_means(stacked_grads, num_batches, scheme=grouping_scheme)
+    return jax.tree.map(lambda z: jnp.median(z, axis=0), means)
+
+
+@register("coord_trimmed_mean",
+          "coordinate-wise q-trimmed mean of the k batch means "
+          "[Yin et al. '18] — sound combined rule; trims the q largest AND "
+          "q smallest per coordinate, unlike norm_select's one-sided cut",
+          needs_num_byzantine=True, needs_grouping=True)
+def coord_trimmed_mean_aggregator(stacked_grads, *,
+                                  num_batches: int | None = None,
+                                  num_byzantine: int = 0,
+                                  epsilon: float = 0.1,
+                                  grouping_scheme: str = "contiguous",
+                                  trim_count: int | None = None, **_kw):
+    """Coordinate-wise trimmed mean over the k batch means (Yin et al. '18,
+    order-optimal under q < k/2).
+
+    Per coordinate, sort the k batch-mean values and discard the t largest
+    and t smallest before averaging, t = ``trim_count`` (default: q — the
+    paper's fixed partition contaminates at most q batches per round).  The
+    two-sided per-coordinate trim removes adversarial values wherever they
+    sit — large, small, or sign-flipped — with no dependence on norms.
+
+    Requires ``2t < k`` so at least one honest-majority value survives per
+    coordinate; silently clamping t below the contamination level would
+    emit an adversary-dominated aggregate while advertising ROBUST-set
+    membership, so (like ``krum``'s degenerate-neighbourhood check) an
+    out-of-guarantee configuration raises instead."""
+    m = _num_workers(stacked_grads)
+    if num_batches is None:
+        from repro.core.grouping import choose_num_batches
+        num_batches = choose_num_batches(m, num_byzantine, epsilon=epsilon)
+    k = num_batches
+    t = num_byzantine if trim_count is None else trim_count
+    if t < 0 or 2 * t >= k:
+        raise ValueError(
+            f"coord_trimmed_mean needs 0 <= 2·trim_count < k batches (got "
+            f"trim_count={t}, k={k}): trimming cannot cover q Byzantine "
+            "batch means and the Yin et al. '18 guarantee is void — "
+            "increase num_batches or lower q")
+    means = batch_means(stacked_grads, k, scheme=grouping_scheme)
+
+    def leaf(z):
+        s = jnp.sort(z, axis=0)
+        if t > 0:
+            s = s[t:k - t]
+        return jnp.mean(s, axis=0).astype(z.dtype)
+
+    return jax.tree.map(leaf, means)
+
+
+@register("norm_filter_gmom",
+          "paper §6 combined rule [Su & Xu '18]: two-sided norm-envelope "
+          "filter (drop reports whose norm sits outside median ± c·MAD — "
+          "the huge AND the adversarially-small outliers), then GMoM on "
+          "the surviving reports",
+          needs_num_byzantine=True, needs_grouping=True)
+def norm_filter_gmom_aggregator(stacked_grads, *,
+                                num_batches: int | None = None,
+                                num_byzantine: int = 0, epsilon: float = 0.1,
+                                envelope_multiplier: float = 4.0,
+                                grouping_scheme: str = "contiguous",
+                                trim_multiplier: float | None = 3.0,
+                                max_iters: int = 64, tol: float = 1e-8,
+                                round_backend: str | None = "auto", **_kw):
+    """Two-sided norm filter -> geometric median of means (the §6
+    "combined selection rule", in the filtering style of Su & Xu '18).
+
+    Stage 1 — envelope filter: a report survives iff its l2 norm is within
+    ``envelope_multiplier × MAD`` of the median report norm (MAD = median
+    absolute deviation, a breakdown-point-1/2 spread estimate; a small
+    relative slack keeps near-identical honest norms inside when the MAD
+    underflows).  Unlike ``norm_select``'s bottom-k — which an adversary
+    *minimizing* its norm is preferentially selected by — the envelope is
+    two-sided: huge-norm attacks (sign_flip, mean_shift, noise) fall above
+    it, adversarially-small reports (zero, shrunk inner_product) fall
+    below.  Because at least half the reports sit within one MAD of the
+    median by construction, at least ⌈m/2⌉ reports always survive.
+
+    Stage 2 — GMoM on the survivors: each batch mean is re-averaged over
+    its *surviving* members (a batch whose members were all filtered falls
+    back to its unfiltered mean so shapes stay static), then the standard
+    Remark-2 trim + Weiszfeld pipeline runs via :func:`gmom_aggregator` —
+    including its ``round_backend`` dispatch, so the fused Pallas round
+    kernel serves this rule on TPU unchanged.  The filter only ever drops
+    outliers; boundedness under attacks that *survive* the envelope (alie,
+    norm_stealth calibrated below the trim threshold, unit-scale
+    inner_product) is inherited from the GMoM stage's q < k/2 median
+    tolerance — this is what makes the combined rule sound where
+    ``norm_select`` / ``norm_clip_mean`` are not.
+
+    .. note:: with singleton batches (k = m, e.g. the group-mode production
+       step where each batch-group gradient is its own report) every
+       filtered report IS a fully-filtered batch, so the static-shape
+       fallback makes stage 1 a structural no-op and the rule coincides
+       with ``gmom`` (whose Remark-2 trim + median still provide the
+       bounded-deviation guarantee).  The filter stage adds protection
+       precisely when batches have >= 2 members: it restores the honest
+       members' mean instead of letting one crafted report poison the
+       whole batch mean.
+    """
+    m = _num_workers(stacked_grads)
+    if num_batches is None:
+        from repro.core.grouping import choose_num_batches
+        num_batches = choose_num_batches(m, num_byzantine, epsilon=epsilon)
+    k = num_batches
+    norms = batch_mean_norms(stacked_grads)                      # (m,)
+    med = jnp.median(norms)
+    mad = jnp.median(jnp.abs(norms - med))
+    tau = envelope_multiplier * mad + 1e-3 * med + 1e-12
+    keep = (jnp.abs(norms - med) <= tau).astype(jnp.float32)     # (m,)
+
+    from repro.core.grouping import worker_batch_ids
+    grouping = make_grouping(m, k, scheme=grouping_scheme)
+    batch_id = jnp.asarray(worker_batch_ids(grouping))           # (m,) static
+    sizes = jnp.asarray(grouping.batch_sizes, jnp.float32)       # (k,)
+    counts = jax.ops.segment_sum(keep, batch_id, num_segments=k)  # (k,)
+    # batch with every member filtered: fall back to its unfiltered mean
+    keep_eff = jnp.where(counts[batch_id] > 0, keep, 1.0)
+    counts_eff = jnp.where(counts > 0, counts, sizes)
+    # Rescale rows so the UNWEIGHTED batch-mean machinery (reference
+    # reshape-mean or the fused kernel's membership matmul / batch_sizes
+    # division) yields the mean over the surviving members only:
+    #   mean_l(g * r) = sum_{w in l, kept} g_w / count_l.
+    rescale = keep_eff * sizes[batch_id] / counts_eff[batch_id]   # (m,)
+
+    def leaf(g):
+        r = rescale.astype(g.dtype).reshape((-1,) + (1,) * (g.ndim - 1))
+        return g * r
+
+    filtered = jax.tree.map(leaf, stacked_grads)
+    return gmom_aggregator(filtered, num_batches=k,
+                           num_byzantine=num_byzantine, epsilon=epsilon,
+                           grouping_scheme=grouping_scheme,
+                           trim_multiplier=trim_multiplier,
+                           max_iters=max_iters, tol=tol,
+                           round_backend=round_backend)
+
+
+# ---------------------------------------------------------------------------
 # per-leaf ("blockwise") GMoM — the beyond-paper perf variant (DESIGN.md §3)
 
 @register("gmom_per_leaf",
           "GMoM applied independently per parameter tensor — beyond-paper "
-          "blockwise variant (DESIGN.md §3)")
+          "blockwise variant (DESIGN.md §3)",
+          needs_num_byzantine=True, needs_grouping=True)
 def gmom_per_leaf_aggregator(stacked_grads, *, num_batches: int | None = None,
                              num_byzantine: int = 0, epsilon: float = 0.1,
+                             grouping_scheme: str = "contiguous",
                              max_iters: int = 64, tol: float = 1e-8, **_kw):
     """Blockwise GMoM: one geometric median per parameter tensor instead of
     one in the concatenated R^d.  Cheaper to shard (medians run leaf-local)
@@ -425,7 +693,7 @@ def gmom_per_leaf_aggregator(stacked_grads, *, num_batches: int | None = None,
         num_batches = choose_num_batches(m, num_byzantine, epsilon=epsilon)
     if num_batches == 1:
         return mean_aggregator(stacked_grads)
-    means = batch_means(stacked_grads, num_batches)
+    means = batch_means(stacked_grads, num_batches, scheme=grouping_scheme)
 
     def leaf(z):
         k = z.shape[0]

@@ -89,6 +89,17 @@ def make_grouping(num_workers: int, num_batches: int, *,
                     perm=perm)
 
 
+def worker_batch_ids(grouping: Grouping) -> np.ndarray:
+    """(m,) int array: ``worker_batch_ids(g)[w]`` is the batch worker w
+    belongs to.  The per-worker (row-wise) view of ``assignment_matrix`` —
+    the form selection-style rules (``norm_filter_gmom``) use to rescale a
+    worker's contribution to its batch mean without materializing S."""
+    ids = np.zeros((grouping.num_workers,), np.int64)
+    for l, members in enumerate(grouping.batches()):
+        ids[members] = l
+    return ids
+
+
 def assignment_matrix(grouping: Grouping) -> np.ndarray:
     """Dense {0,1} membership matrix S of shape (k, m): S[l, w] = 1 iff
     worker w belongs to batch l.  Batch sums are ``S @ G`` for stacked

@@ -80,25 +80,30 @@ def per_worker_grads(loss_fn: Callable, params, worker_batches, *,
 
 
 def aggregate_reported(reported_grads, cfg: RobustConfig, *, key):
-    """Robust aggregation of already-(possibly-)corrupted reports."""
+    """Robust aggregation of already-(possibly-)corrupted reports.
+
+    Which config fields an aggregator receives is driven by its registry
+    metadata (the ``needs_*`` flags on ``aggregators.register``), not by a
+    hardcoded name list: a newly registered rule declares what it consumes
+    and gets it threaded here without touching this dispatch site.  Rules
+    take ``**_kw`` so a bundle field they don't consume is swallowed.
+    """
     agg = aggregators.get_aggregator(cfg.aggregator)
     kwargs: dict[str, Any] = {}
-    if cfg.aggregator in ("gmom", "gmom_per_leaf"):
-        kwargs.update(num_batches=cfg.resolved_num_batches(),
-                      num_byzantine=cfg.num_byzantine,
-                      epsilon=cfg.epsilon,
-                      max_iters=cfg.gmom_max_iters, tol=cfg.gmom_tol)
-        if cfg.aggregator == "gmom":
-            kwargs.update(trim_multiplier=cfg.trim_multiplier,
-                          grouping_scheme=cfg.grouping_scheme,
-                          round_backend=cfg.round_backend)
-    elif cfg.aggregator in ("krum", "trimmed_mean", "norm_select"):
+    if agg.needs_num_byzantine:
         kwargs.update(num_byzantine=cfg.num_byzantine)
-    elif cfg.aggregator == "random_select":
+    if agg.needs_key:
         # NOTE: the paper's adversary sees the server's random bits — and so
         # do our omniscient attacks (they receive the same ``key``): the
         # attacker can adapt, which is exactly the §6 caveat under test.
         kwargs.update(key=jax.random.fold_in(key, 13))
+    if agg.needs_grouping:
+        kwargs.update(num_batches=cfg.resolved_num_batches(),
+                      epsilon=cfg.epsilon,
+                      grouping_scheme=cfg.grouping_scheme,
+                      trim_multiplier=cfg.trim_multiplier,
+                      max_iters=cfg.gmom_max_iters, tol=cfg.gmom_tol,
+                      round_backend=cfg.round_backend)
     return agg(reported_grads, **kwargs)
 
 

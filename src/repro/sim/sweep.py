@@ -58,7 +58,12 @@ from repro.core import RobustConfig, byzantine
 
 POD_ATTACKS = ("sign_flip", "alie", "norm_stealth")
 POD_SCHEDULES = ("static", "rotating", "stealth_then_strike")
-POD_AGGREGATORS = ("gmom", "mean", "trimmed_mean")
+# krum (ROADMAP PR 4 follow-up: its O(k²) distance matrix must lower
+# acceptably at model scale — the record keeps its collective/memory cells)
+# and norm_filter_gmom (the sound §6 combined rule) joined the axis when
+# the defense gap closed.
+POD_AGGREGATORS = ("gmom", "mean", "trimmed_mean", "krum",
+                   "norm_filter_gmom")
 POD_MESHES = ("16x16", "2x16x16")
 
 #: mesh name -> multi_pod flag for launch.mesh.make_production_mesh

@@ -18,7 +18,9 @@ def test_registry_contents():
     names = aggregators.available()
     for expected in ["mean", "gmom", "geomed", "coordinate_median",
                      "trimmed_mean", "krum", "norm_clip_mean",
-                     "gmom_per_leaf"]:
+                     "gmom_per_leaf", "random_select", "norm_select",
+                     "coord_median", "coord_trimmed_mean",
+                     "norm_filter_gmom"]:
         assert expected in names
     with pytest.raises(KeyError):
         aggregators.get_aggregator("nope")
@@ -162,3 +164,140 @@ def test_norm_select_exact_under_colluding_ties():
     g = g.at[0].set(5.0).at[1].set(5.0)   # two tied large-norm colluders
     out = aggregators.norm_select_aggregator({"w": g}, num_byzantine=2)
     np.testing.assert_allclose(np.asarray(out["w"]), np.ones(4), atol=1e-6)
+
+
+def test_random_select_requires_key():
+    """Regression: the old PRNGKey(0) fallback made the "random" subset
+    deterministic and identical every round — a silent downgrade to a fixed
+    selection rule.  A missing key must raise, not degrade."""
+    with pytest.raises(ValueError, match="requires a PRNG key"):
+        aggregators.random_select_aggregator(_stacked())
+
+
+def test_krum_degenerate_neighbourhood_raises():
+    """Krum's m - q - 2 nearest-neighbour score needs m > q + 2; below that
+    the old code silently clamped to a single-neighbour score with no
+    selection guarantee — it must raise loudly instead."""
+    s = _stacked(m=4)
+    with pytest.raises(ValueError, match="m > q \\+ 2"):
+        aggregators.krum_aggregator(s, num_byzantine=2)   # m = q + 2
+    # smallest valid neighbourhood (closest = 1) still works
+    out = aggregators.krum_aggregator(_stacked(m=5), num_byzantine=2)
+    assert out["w"].shape == (5,)
+
+
+# ---------------------------------------------------------------------------
+# sound combined selection rules (the §6 defense-gap fix)
+
+def test_coord_median_matches_manual_median_of_batch_means():
+    s = _stacked(m=12)
+    out = aggregators.coord_median_aggregator(s, num_batches=6)
+    means = aggregators.batch_means(s, 6)
+    np.testing.assert_allclose(
+        np.asarray(out["w"]), np.median(np.asarray(means["w"]), axis=0),
+        atol=1e-6)
+
+
+def test_coord_trimmed_mean_discards_extremes_per_coordinate():
+    """With t = q the per-coordinate trim must remove an adversarial batch
+    value regardless of sign or magnitude — the two-sidedness norm_select
+    lacks."""
+    m, k = 12, 6
+    s = _stacked(m)
+    # poison workers 0,1 (both land in batch 0 under contiguous b=2):
+    # one coordinate huge, one tiny — both sides of the honest range.
+    g = s["w"].at[0, 0].set(1e4).at[1, 0].set(1e4)
+    g = g.at[0, 1].set(-1e4).at[1, 1].set(-1e4)
+    out = aggregators.coord_trimmed_mean_aggregator(
+        {"w": g}, num_batches=k, num_byzantine=1)
+    assert float(jnp.max(jnp.abs(out["w"] - 1.0))) < 0.2
+
+
+def test_norm_filter_gmom_drops_huge_and_tiny_outliers():
+    """The envelope filter is two-sided: a huge-norm report AND a
+    deliberately-tiny report are both excluded from their batch means, so
+    the aggregate recovers the honest value where one-sided selection
+    (norm_select keeps the tiny one) is biased."""
+    m, k = 12, 6
+    s = _stacked(m)
+    g = s["w"].at[0].set(100.0)      # classic huge-norm outlier (batch 0)
+    g = g.at[2].set(1e-4)            # adversarially-small report (batch 1)
+    out = aggregators.norm_filter_gmom_aggregator(
+        {"w": g}, num_batches=k, num_byzantine=2, round_backend="reference")
+    # surviving members of batches 0 and 1 are honest -> near-honest output
+    assert float(jnp.max(jnp.abs(out["w"] - 1.0))) < 0.1
+
+
+def test_norm_filter_gmom_all_filtered_batch_falls_back():
+    """A batch whose members are ALL outside the envelope falls back to its
+    unfiltered mean (static shapes), and the downstream GMoM median still
+    tolerates that single contaminated batch mean."""
+    m, k = 12, 6
+    s = _stacked(m)
+    g = s["w"].at[0].set(100.0).at[1].set(100.0)   # whole batch 0 huge
+    out = aggregators.norm_filter_gmom_aggregator(
+        {"w": g}, num_batches=k, num_byzantine=2, round_backend="reference")
+    assert bool(jnp.all(jnp.isfinite(out["w"])))
+    assert float(jnp.max(jnp.abs(out["w"] - 1.0))) < 0.5
+
+
+def test_coord_median_rejects_crossed_breakdown_point():
+    """q >= k/2 crosses the median's breakdown point — must raise, not
+    silently emit an adversary-dominated aggregate."""
+    with pytest.raises(ValueError, match="2q < k"):
+        aggregators.coord_median_aggregator(
+            _stacked(m=8), num_batches=4, num_byzantine=2)   # 2q = k
+
+
+def test_coord_trimmed_mean_rejects_uncoverable_contamination():
+    """q >= k/2 is outside the Yin et al. guarantee: the old clamp silently
+    returned an adversary-dominated aggregate; it must raise instead
+    (mirroring krum's degenerate-neighbourhood check)."""
+    s = _stacked(m=16)
+    with pytest.raises(ValueError, match="2·trim_count < k"):
+        aggregators.coord_trimmed_mean_aggregator(
+            s, num_batches=8, num_byzantine=4)   # 2q = k
+    with pytest.raises(ValueError, match="2·trim_count < k"):
+        aggregators.coord_trimmed_mean_aggregator(
+            s, num_batches=8, num_byzantine=1, trim_count=-1)
+
+
+def test_gmom_per_leaf_honors_grouping_scheme():
+    """needs_grouping threads cfg.grouping_scheme; the rule must actually
+    partition with it, not silently fall back to contiguous."""
+    m, k = 8, 4
+    # six 0-workers then two 10-workers: contiguous pairs give batch means
+    # [0, 0, 0, 10] (honest majority -> geomed near 0), strided pairs
+    # (worker j with j+4) give [0, 0, 5, 5] (geomed pulled to ~2.5).
+    g = jnp.asarray([0.0] * 6 + [10.0] * 2, jnp.float32)[:, None] \
+        * jnp.ones((m, 3), jnp.float32)
+    cont = aggregators.gmom_per_leaf_aggregator(
+        {"w": g}, num_batches=k, grouping_scheme="contiguous")
+    strd = aggregators.gmom_per_leaf_aggregator(
+        {"w": g}, num_batches=k, grouping_scheme="strided")
+    assert float(jnp.max(cont["w"])) < 1.0, np.asarray(cont["w"])
+    assert float(jnp.min(strd["w"])) > 1.5, np.asarray(strd["w"])
+
+
+def test_norm_filter_gmom_honest_passthrough():
+    """With i.i.d. honest reports the envelope keeps (essentially) everyone
+    and the rule coincides with plain gmom on the same grouping."""
+    s = _stacked(m=12)
+    nf = aggregators.norm_filter_gmom_aggregator(
+        s, num_batches=6, round_backend="reference")
+    gm = aggregators.gmom_aggregator(
+        s, num_batches=6, round_backend="reference")
+    np.testing.assert_allclose(np.asarray(nf["w"]), np.asarray(gm["w"]),
+                               atol=1e-5)
+
+
+def test_worker_batch_ids_inverts_assignment_matrix():
+    from repro.core.grouping import (assignment_matrix, make_grouping,
+                                     worker_batch_ids)
+    for m, k, scheme in [(12, 6, "contiguous"), (12, 5, "contiguous"),
+                         (8, 4, "strided"), (50, 11, "contiguous")]:
+        grouping = make_grouping(m, k, scheme=scheme)
+        ids = worker_batch_ids(grouping)
+        s = assignment_matrix(grouping)
+        for w in range(m):
+            assert s[ids[w], w] == 1.0, (m, k, scheme, w)

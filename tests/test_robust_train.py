@@ -117,6 +117,63 @@ def test_rotating_byzantine_sets():
     assert err < 1.0
 
 
+def test_registry_driven_kwarg_dispatch():
+    """aggregate_reported threads config fields by registry metadata (the
+    needs_* flags on @register), not by hardcoded aggregator-name lists: a
+    newly registered rule declaring the flags receives the kwargs with zero
+    dispatch-site edits — the regression this pins is a new aggregator
+    silently getting no q and no randomness."""
+    from repro.core import aggregators
+    from repro.core.robust_train import aggregate_reported
+    seen: dict = {}
+
+    @aggregators.register("_test_dummy", "test-only dummy",
+                          needs_num_byzantine=True, needs_key=True,
+                          needs_grouping=True)
+    def dummy(stacked, **kw):
+        seen.update(kw)
+        return jax.tree.map(lambda g: jnp.mean(g, axis=0), stacked)
+
+    try:
+        cfg = RobustConfig(num_workers=8, num_byzantine=2, num_batches=4,
+                           aggregator="_test_dummy")
+        aggregate_reported({"w": jnp.ones((8, 3))}, cfg,
+                           key=jax.random.PRNGKey(0))
+        assert seen["num_byzantine"] == 2
+        assert seen["num_batches"] == 4
+        assert seen["epsilon"] == cfg.epsilon
+        assert seen["grouping_scheme"] == cfg.grouping_scheme
+        assert seen["trim_multiplier"] == cfg.trim_multiplier
+        assert seen["max_iters"] == cfg.gmom_max_iters
+        assert seen["tol"] == cfg.gmom_tol
+        assert seen["round_backend"] == cfg.round_backend
+        assert seen["key"] is not None
+    finally:
+        aggregators._REGISTRY.pop("_test_dummy")
+
+
+def test_flagless_aggregator_receives_no_kwargs():
+    """The complement: a rule with no needs_* flags gets a bare call — no
+    stray kwargs to swallow, so simple aggregators need no **_kw at all."""
+    from repro.core import aggregators
+    from repro.core.robust_train import aggregate_reported
+    seen: dict = {}
+
+    @aggregators.register("_test_bare", "test-only bare dummy")
+    def bare(stacked, **kw):
+        seen.update(kw)
+        return jax.tree.map(lambda g: jnp.mean(g, axis=0), stacked)
+
+    try:
+        cfg = RobustConfig(num_workers=8, num_byzantine=2,
+                           aggregator="_test_bare")
+        aggregate_reported({"w": jnp.ones((8, 3))}, cfg,
+                           key=jax.random.PRNGKey(0))
+        assert seen == {}
+    finally:
+        aggregators._REGISTRY.pop("_test_bare")
+
+
 def test_tolerance_condition_helpers():
     assert theory.tolerance_ok(20, 10, 4)          # 2.2*4 = 8.8 <= 10
     assert not theory.tolerance_ok(20, 8, 4)       # 8.8 > 8
