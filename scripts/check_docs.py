@@ -144,6 +144,25 @@ def _pod_sweep_problems(paper_map: str) -> list[str]:
             problems.append(
                 f"production mesh {mesh!r} has no recorded scenario in "
                 f"{sweep_path}")
+
+    # big-model (sharded-aggregation) cells: documented + recorded with the
+    # grad_mode they claim to measure.
+    if f"`{sweep.BIG_MODEL_ARCH}`" not in benchmarks_md:
+        problems.append(
+            f"big-model arch {sweep.BIG_MODEL_ARCH!r} is in the sweep "
+            "registry but missing from the docs/BENCHMARKS.md big-model "
+            "section")
+    for name in sweep.BIG_MODEL_SCENARIOS:
+        entry = scenarios.get(name)
+        if entry is None:
+            continue  # absence already reported above
+        want = "gathered" if name.endswith("/gathered") else "sharded"
+        if entry.get("grad_mode") != want:
+            problems.append(
+                f"big-model scenario {name!r} recorded "
+                f"grad_mode={entry.get('grad_mode')!r}, expected {want!r} — "
+                "the O(d/shards) comparison needs both modes recorded as "
+                "labelled")
     return problems
 
 

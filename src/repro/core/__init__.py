@@ -18,12 +18,17 @@ from repro.core.geometric_median import (  # noqa: F401
     weiszfeld_step,
 )
 from repro.core import aggregators, byzantine, grouping, theory  # noqa: F401
+from repro.core.shard_aggregation import (  # noqa: F401
+    ShardSpec,
+    blocked_partial_sum,
+)
 from repro.core.robust_train import (  # noqa: F401
     RobustConfig,
     aggregate,
     aggregate_reported,
     make_robust_train_step,
     make_run_rounds,
+    make_sharded_aggregate,
     make_shardmap_aggregate,
     per_worker_grads,
     schedule_from_config,

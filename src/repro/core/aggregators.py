@@ -30,9 +30,19 @@ small-norm attacks; the **sound combined selection rules** close that gap
                            dropping huge AND adversarially-small outliers)
                            then GMoM on the survivors [Su & Xu '18]
 
+Every rule honors the **shard-local contract** (see
+``repro.core.shard_aggregation``): coordinate-wise rules touch each
+parameter shard independently (no cross-shard collectives at all), and the
+norm-based rules take an optional ``shard_spec`` so their distance/norm
+reductions combine per-shard partial squared norms — one (k,)-sized
+reduction per Weiszfeld iterate for GMoM, one (m, m) partial distance
+reduction for krum.  A partitioned spec also forces the ``reference``
+round backend (the fused kernel's leaf concatenation would gather).
+
 Every ``register(...)`` call carries a one-line description plus the
 kwarg-dispatch flags (``needs_num_byzantine`` / ``needs_key`` /
-``needs_grouping``) that ``robust_train.aggregate_reported`` reads;
+``needs_grouping`` / ``needs_shard_spec``) that
+``robust_train.aggregate_reported`` reads;
 ``describe()`` renders the registry as a markdown table (the one in
 README.md), and ``scripts/check_docs.py`` fails CI when a registered name
 is missing from ``docs/PAPER_MAP.md`` or has an empty description.
@@ -89,6 +99,11 @@ class Aggregator:
                                 ``max_iters``/``tol``, and ``round_backend``
                                 (rules that don't consume a field swallow it
                                 via ``**_kw``).
+    * ``needs_shard_spec``    — receives the ``ShardSpec`` describing how
+                                the stacked gradients are partitioned over
+                                param shards (norm-based rules whose
+                                reductions cross shards; coordinate-wise
+                                rules are shard-local without one).
     """
     name: str
     fn: AggregatorFn
@@ -96,6 +111,7 @@ class Aggregator:
     needs_num_byzantine: bool = False
     needs_key: bool = False
     needs_grouping: bool = False
+    needs_shard_spec: bool = False
 
     def __call__(self, stacked_grads, **kw):
         return self.fn(stacked_grads, **kw)
@@ -103,12 +119,12 @@ class Aggregator:
 
 def register(name: str, description: str = "", *,
              needs_num_byzantine: bool = False, needs_key: bool = False,
-             needs_grouping: bool = False):
+             needs_grouping: bool = False, needs_shard_spec: bool = False):
     def deco(fn):
         _REGISTRY[name] = Aggregator(
             name=name, fn=fn, description=description,
             needs_num_byzantine=needs_num_byzantine, needs_key=needs_key,
-            needs_grouping=needs_grouping)
+            needs_grouping=needs_grouping, needs_shard_spec=needs_shard_spec)
         return fn
     return deco
 
@@ -158,9 +174,12 @@ def bottom_k_mask(scores: jax.Array, k: int) -> jax.Array:
 def _apply_grouping(stacked, grouping: Grouping):
     """Permute + reshape worker axis m -> (k, b) and mean over b.
 
-    Uneven groupings (k does not divide m — beyond the paper's b = m/k
-    assumption) have no reshape view; their means are a single contraction
-    with the {0,1} membership matrix, computed in f32."""
+    Both paths accumulate in f32 and cast back to the leaf dtype, so bf16
+    batch means agree between k | m and k ∤ m groupings (beyond permutation
+    effects) — previously the even path meant directly in the leaf dtype
+    and diverged from the uneven f32 contraction.  Both paths are also
+    shard-local: the reduction runs over the worker axis only, per
+    coordinate, so partitioned gradient slices need no collectives here."""
     k = grouping.num_batches
     if k == grouping.num_workers and \
             grouping.perm == tuple(range(grouping.num_workers)):
@@ -176,10 +195,11 @@ def _apply_grouping(stacked, grouping: Grouping):
         sizes = jnp.asarray(grouping.batch_sizes, jnp.float32)
 
         def leaf_uneven(g):
-            m = g.shape[0]
-            flat = g.reshape(m, -1).astype(jnp.float32)
-            means = (s @ flat) / sizes[:, None]
-            return means.astype(g.dtype).reshape((k,) + g.shape[1:])
+            # contraction over the worker axis only — no reshape(m, -1), so
+            # a sharded trailing dim stays sharded (coordinate-local).
+            sums = jnp.einsum("km,m...->k...", s, g.astype(jnp.float32))
+            means = sums / sizes.reshape((k,) + (1,) * (g.ndim - 1))
+            return means.astype(g.dtype)
 
         return jax.tree.map(leaf_uneven, stacked)
 
@@ -187,9 +207,10 @@ def _apply_grouping(stacked, grouping: Grouping):
     b = grouping.batch_size
 
     def leaf(g):
+        dt = g.dtype
         g = jnp.take(g, jnp.argsort(perm), axis=0)  # order workers by slot
         g = g.reshape((k, b) + g.shape[1:])
-        return jnp.mean(g, axis=1)
+        return jnp.mean(g.astype(jnp.float32), axis=1).astype(dt)
 
     return jax.tree.map(leaf, stacked)
 
@@ -215,23 +236,47 @@ def mean_aggregator(stacked_grads, **_kw):
 
 def resolve_round_backend(round_backend: str | None, *, num_batches: int,
                           total_dim: int | None = None,
-                          num_workers: int = 0) -> str:
+                          num_workers: int = 0,
+                          target_backend: str | None = None,
+                          partitioned: bool = False) -> str:
     """Map the ``round_backend`` switch to a concrete path.
 
     ``auto``/None picks the fused Pallas kernel on TPU backends and the
-    reference jnp pipeline elsewhere.  When ``total_dim`` is known, any
-    fused selection (auto or explicit) falls back to ``reference`` if the
-    kernel's VMEM-resident footprint (``round.round_resident_bytes`` — the
-    same formula the kernel's own guard uses) would blow its budget —
-    silently for auto, with a warning for an explicit request."""
+    reference jnp pipeline elsewhere.  ``target_backend`` names the backend
+    the lowered program will RUN on; auto-dispatch keys off it instead of
+    the host's ``jax.default_backend()``, so a dry-run sweep lowering TPU
+    mesh programs from a CPU host resolves the production path (previously
+    those sweeps silently recorded the host's ``reference`` path).
+
+    ``partitioned`` gradients (a ShardSpec with num_shards > 1) force
+    ``reference``: the fused round kernel concatenates every leaf into one
+    (m, d) block, which on partitioned slices would mean the very gather
+    the shard-local contract exists to avoid.  Explicit fused requests get
+    a warning; auto falls back silently.
+
+    When ``total_dim`` is known, any fused selection (auto or explicit)
+    falls back to ``reference`` if the kernel's VMEM-resident footprint
+    (``round.round_resident_bytes`` — the same formula the kernel's own
+    guard uses) would blow its budget — silently for auto, with a warning
+    for an explicit request."""
     if round_backend not in (None, "auto", "reference", "fused",
                              "fused_interpret"):
         raise ValueError(f"unknown round_backend {round_backend!r}")
     explicit = round_backend not in (None, "auto")
     if not explicit:
-        import jax as _jax
-        round_backend = ("fused" if _jax.default_backend() == "tpu"
-                         else "reference")
+        if target_backend is None:
+            import jax as _jax
+            target_backend = _jax.default_backend()
+        round_backend = "fused" if target_backend == "tpu" else "reference"
+    if round_backend != "reference" and partitioned:
+        if explicit:
+            import warnings
+            warnings.warn(
+                f"round_backend={round_backend!r} requested but the stacked "
+                "gradients are partitioned over param shards; the fused "
+                "round kernel's leaf concatenation would gather them — "
+                "using 'reference'", stacklevel=3)
+        return "reference"
     if round_backend != "reference" and total_dim is not None:
         from repro.kernels.geomed import round as round_kernel
         if not round_kernel.fits_vmem(num_workers, num_batches, total_dim):
@@ -253,29 +298,38 @@ def _total_dim(stacked) -> int:
 
 @register("gmom", "geometric median of means — the paper's Algorithm 2 "
           "(fused Pallas round kernel on TPU, jnp reference elsewhere)",
-          needs_num_byzantine=True, needs_grouping=True)
+          needs_num_byzantine=True, needs_grouping=True,
+          needs_shard_spec=True)
 def gmom_aggregator(stacked_grads, *, num_batches: int | None = None,
                     num_byzantine: int = 0, epsilon: float = 0.1,
                     grouping_scheme: str = "contiguous",
                     trim_multiplier: float | None = 3.0,
                     max_iters: int = 64, tol: float = 1e-8,
-                    round_backend: str | None = "auto", **_kw):
+                    round_backend: str | None = "auto",
+                    shard_spec=None, **_kw):
     """Paper Algorithm 2 step 4: A_k(g) = med{batch means}, with the
     Remark-2 norm trimming applied as zero Weiszfeld weights.
 
     ``round_backend`` selects the hot-path lowering (see module docstring):
     the golden-trace-stable jnp ``reference`` pipeline, or the ``fused``
     Pallas round kernel that keeps means+trim+Weiszfeld VMEM-resident.
+    A partitioned ``shard_spec`` forces ``reference`` (the kernel would
+    gather) and routes every distance/norm reduction through
+    :func:`repro.core.shard_aggregation.blocked_partial_sum` — one (k,)
+    reduction per Weiszfeld iterate, nothing of size d ever crosses shards.
     """
+    from repro.core import shard_aggregation as _sa
     m = _num_workers(stacked_grads)
     if num_batches is None:
         from repro.core.grouping import choose_num_batches
         num_batches = choose_num_batches(m, num_byzantine, epsilon=epsilon)
     if num_batches == 1:    # GMoM reduces to the mean (paper §2.1)
         return mean_aggregator(stacked_grads)
-    backend = resolve_round_backend(round_backend, num_batches=num_batches,
-                                    total_dim=_total_dim(stacked_grads),
-                                    num_workers=m)
+    backend = resolve_round_backend(
+        round_backend, num_batches=num_batches,
+        total_dim=_total_dim(stacked_grads), num_workers=m,
+        target_backend=_sa.target_backend_of(shard_spec),
+        partitioned=_sa.is_partitioned(shard_spec))
     if backend != "reference":
         from repro.kernels.geomed import round as round_kernel
         grouping = make_grouping(m, num_batches, scheme=grouping_scheme)
@@ -287,20 +341,22 @@ def gmom_aggregator(stacked_grads, *, num_batches: int | None = None,
     means = batch_means(stacked_grads, num_batches, scheme=grouping_scheme)
     weights = None
     if trim_multiplier is not None:
-        norms = batch_mean_norms(means)
+        norms = batch_mean_norms(means, shard_spec=shard_spec)
         weights = trim_weights(norms, multiplier=trim_multiplier)
     return geometric_median_pytree(means, weights=weights,
-                                      max_iters=max_iters, tol=tol)
+                                      max_iters=max_iters, tol=tol,
+                                      shard_spec=shard_spec)
 
 
 @register("geomed", "geometric median of the raw worker gradients — the "
-          "k = m special case of GMoM (paper §2.1)")
+          "k = m special case of GMoM (paper §2.1)",
+          needs_shard_spec=True)
 def geomed_aggregator(stacked_grads, *, max_iters: int = 64,
-                      tol: float = 1e-8, **_kw):
+                      tol: float = 1e-8, shard_spec=None, **_kw):
     """GMoM with every worker its own batch (k = m, paper §2.1): maximal
     robustness per report, no variance reduction from batching."""
     return geometric_median_pytree(stacked_grads, max_iters=max_iters,
-                                      tol=tol)
+                                      tol=tol, shard_spec=shard_spec)
 
 
 @register("coordinate_median", "coordinate-wise median — the marginal-"
@@ -334,14 +390,24 @@ def trimmed_mean_aggregator(stacked_grads, *, trim_fraction: float = 0.1,
 
 
 @register("krum", "Krum selection rule [BMGS17] — the paper's closest "
-          "related work; picks one whole gradient by distance score",
-          needs_num_byzantine=True)
-def krum_aggregator(stacked_grads, *, num_byzantine: int = 0, **_kw):
+          "related work; picks one whole gradient via the shard-local "
+          "‖a‖²+‖b‖²−2a·b gram expansion (no flattened f32 copies)",
+          needs_num_byzantine=True, needs_shard_spec=True)
+def krum_aggregator(stacked_grads, *, num_byzantine: int = 0,
+                    shard_spec=None, **_kw):
     """Krum (Blanchard et al. '17): return the single worker gradient with
     the smallest sum of squared distances to its m - q - 2 nearest
     neighbours.  Selects a *received* gradient verbatim rather than
     averaging — robust, but discards the variance reduction of honest
     averaging the paper's GMoM keeps.
+
+    The pairwise distances come from the ‖a‖² + ‖b‖² − 2a·b expansion of
+    one (m, m) gram matrix, accumulated per leaf *in place* via
+    ``dot_general`` with an f32 accumulator — no ``reshape(m, -1)`` and no
+    full-leaf f32 copy, so peak memory is the stacked gradients themselves
+    plus O(m²).  Under a partitioned ``shard_spec`` the per-shard partial
+    grams combine through ONE (m, m) blocked reduction — the only
+    collective krum needs.
 
     Requires ``m > q + 2`` so every score sums at least one *other*
     worker's distance; below that the neighbourhood is degenerate and
@@ -349,6 +415,7 @@ def krum_aggregator(stacked_grads, *, num_byzantine: int = 0, **_kw):
     (mirroring the loud-validation style of ``RobustConfig``'s
     q <= (m-1)/2 tolerance condition).
     """
+    from repro.core.shard_aggregation import blocked_partial_sum
     m = _num_workers(stacked_grads)
     closest = m - num_byzantine - 2
     if closest < 1:
@@ -356,12 +423,17 @@ def krum_aggregator(stacked_grads, *, num_byzantine: int = 0, **_kw):
             f"krum needs m > q + 2 workers (got m={m}, q={num_byzantine}): "
             "the m - q - 2 nearest-neighbour score is degenerate and the "
             "selection guarantee [BMGS17] is void")
-    # pairwise squared distances accumulated leaf-by-leaf (never flattens).
-    d2 = jnp.zeros((m, m), jnp.float32)
-    for g in jax.tree.leaves(stacked_grads):
-        gf = g.reshape(m, -1).astype(jnp.float32)
-        sq = jnp.sum(gf * gf, axis=1)
-        d2 = d2 + (sq[:, None] + sq[None, :] - 2.0 * gf @ gf.T)
+
+    def leaf_gram(g):
+        axes = tuple(range(1, g.ndim))
+        return jax.lax.dot_general(
+            g, g, dimension_numbers=((axes, axes), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    gram = blocked_partial_sum(shard_spec, jax.tree.leaves(stacked_grads),
+                               leaf_gram, shape=(m, m), lead_axes=1)
+    sq = jnp.diagonal(gram)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * gram
     d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf, jnp.float32))
     # score(i) = sum of the m - q - 2 smallest distances to others
     sorted_d2 = jnp.sort(d2, axis=1)
@@ -372,9 +444,10 @@ def krum_aggregator(stacked_grads, *, num_byzantine: int = 0, **_kw):
 
 @register("norm_clip_mean",
           "mean of gradients clipped to the median norm — KNOWN-UNSOUND "
-          "vs small-norm attacks (alie, norm_stealth, inner_product)")
+          "vs small-norm attacks (alie, norm_stealth, inner_product)",
+          needs_shard_spec=True)
 def norm_clip_mean_aggregator(stacked_grads, *, clip_multiplier: float = 1.0,
-                              **_kw):
+                              shard_spec=None, **_kw):
     """Mean of gradients clipped to ``clip_multiplier x median`` norm.
 
     .. warning:: **known-unsound vs. alie / norm_stealth.**  Clipping only
@@ -387,7 +460,7 @@ def norm_clip_mean_aggregator(stacked_grads, *, clip_multiplier: float = 1.0,
        selection rules against these adaptive attacks is an open ROADMAP
        item ("Defense gap found by the matrix tests").
     """
-    norms = batch_mean_norms(stacked_grads)            # (m,)
+    norms = batch_mean_norms(stacked_grads, shard_spec=shard_spec)   # (m,)
     tau = clip_multiplier * jnp.median(norms)
     scale = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-12))
 
@@ -442,8 +515,9 @@ def random_select_aggregator(stacked_grads, *, key=None,
           "paper §6 rule 2: average the gradients with the smallest l2 "
           "norms — KNOWN-UNSOUND vs small-norm attacks (alie, "
           "norm_stealth); see benchmarks/selection_rules",
-          needs_num_byzantine=True)
-def norm_select_aggregator(stacked_grads, *, num_byzantine: int = 0, **_kw):
+          needs_num_byzantine=True, needs_shard_spec=True)
+def norm_select_aggregator(stacked_grads, *, num_byzantine: int = 0,
+                           shard_spec=None, **_kw):
     """Average the ``m - q`` smallest-norm gradients (paper §6, rule 2).
 
     .. warning:: **known-unsound vs. alie / norm_stealth.**  Selecting by
@@ -458,7 +532,7 @@ def norm_select_aggregator(stacked_grads, *, num_byzantine: int = 0, **_kw):
     """
     m = _num_workers(stacked_grads)
     keep = max(m - max(num_byzantine, 1), 1)
-    norms = batch_mean_norms(stacked_grads)            # (m,)
+    norms = batch_mean_norms(stacked_grads, shard_spec=shard_spec)   # (m,)
     # colluders reporting identical gradients tie in norm — rank-select so
     # exactly ``keep`` gradients are ever averaged.
     sel = bottom_k_mask(norms, keep)
@@ -589,7 +663,8 @@ def coord_trimmed_mean_aggregator(stacked_grads, *,
           "filter (drop reports whose norm sits outside median ± c·MAD — "
           "the huge AND the adversarially-small outliers), then GMoM on "
           "the surviving reports",
-          needs_num_byzantine=True, needs_grouping=True)
+          needs_num_byzantine=True, needs_grouping=True,
+          needs_shard_spec=True)
 def norm_filter_gmom_aggregator(stacked_grads, *,
                                 num_batches: int | None = None,
                                 num_byzantine: int = 0, epsilon: float = 0.1,
@@ -597,7 +672,8 @@ def norm_filter_gmom_aggregator(stacked_grads, *,
                                 grouping_scheme: str = "contiguous",
                                 trim_multiplier: float | None = 3.0,
                                 max_iters: int = 64, tol: float = 1e-8,
-                                round_backend: str | None = "auto", **_kw):
+                                round_backend: str | None = "auto",
+                                shard_spec=None, **_kw):
     """Two-sided norm filter -> geometric median of means (the §6
     "combined selection rule", in the filtering style of Su & Xu '18).
 
@@ -639,7 +715,7 @@ def norm_filter_gmom_aggregator(stacked_grads, *,
         from repro.core.grouping import choose_num_batches
         num_batches = choose_num_batches(m, num_byzantine, epsilon=epsilon)
     k = num_batches
-    norms = batch_mean_norms(stacked_grads)                      # (m,)
+    norms = batch_mean_norms(stacked_grads, shard_spec=shard_spec)   # (m,)
     med = jnp.median(norms)
     mad = jnp.median(jnp.abs(norms - med))
     tau = envelope_multiplier * mad + 1e-3 * med + 1e-12
@@ -669,7 +745,8 @@ def norm_filter_gmom_aggregator(stacked_grads, *,
                            grouping_scheme=grouping_scheme,
                            trim_multiplier=trim_multiplier,
                            max_iters=max_iters, tol=tol,
-                           round_backend=round_backend)
+                           round_backend=round_backend,
+                           shard_spec=shard_spec)
 
 
 # ---------------------------------------------------------------------------
@@ -678,15 +755,21 @@ def norm_filter_gmom_aggregator(stacked_grads, *,
 @register("gmom_per_leaf",
           "GMoM applied independently per parameter tensor — beyond-paper "
           "blockwise variant (DESIGN.md §3)",
-          needs_num_byzantine=True, needs_grouping=True)
+          needs_num_byzantine=True, needs_grouping=True,
+          needs_shard_spec=True)
 def gmom_per_leaf_aggregator(stacked_grads, *, num_batches: int | None = None,
                              num_byzantine: int = 0, epsilon: float = 0.1,
                              grouping_scheme: str = "contiguous",
-                             max_iters: int = 64, tol: float = 1e-8, **_kw):
+                             max_iters: int = 64, tol: float = 1e-8,
+                             shard_spec=None, **_kw):
     """Blockwise GMoM: one geometric median per parameter tensor instead of
     one in the concatenated R^d.  Cheaper to shard (medians run leaf-local)
     at the cost of the paper's joint-geometry guarantee holding only
-    per block."""
+    per block.
+
+    Under a blocked ``shard_spec`` each leaf's median runs through the
+    pytree Weiszfeld with blocked reductions (no ``reshape(k, -1)``, whose
+    flatten would destroy the last-dim shard layout)."""
     m = _num_workers(stacked_grads)
     if num_batches is None:
         from repro.core.grouping import choose_num_batches
@@ -694,6 +777,13 @@ def gmom_per_leaf_aggregator(stacked_grads, *, num_batches: int | None = None,
     if num_batches == 1:
         return mean_aggregator(stacked_grads)
     means = batch_means(stacked_grads, num_batches, scheme=grouping_scheme)
+
+    if shard_spec is not None and shard_spec.blocked:
+        def leaf_blocked(z):
+            return geometric_median_pytree(
+                {"x": z}, max_iters=max_iters, tol=tol,
+                shard_spec=shard_spec)["x"]
+        return jax.tree.map(leaf_blocked, means)
 
     def leaf(z):
         k = z.shape[0]

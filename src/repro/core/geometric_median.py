@@ -99,7 +99,8 @@ def geometric_median_pytree(batch_means, *,
                             weights: jax.Array | None = None,
                             max_iters: int = 64,
                             tol: float = 1e-8,
-                            eps: float = 1e-12):
+                            eps: float = 1e-12,
+                            shard_spec=None):
     """Geometric median of k *pytrees* (paper-faithful "global" mode).
 
     ``batch_means`` is a pytree whose leaves have a leading axis k (the batch
@@ -109,8 +110,18 @@ def geometric_median_pytree(batch_means, *,
     **no leaf is ever gathered or flattened**, so the peak memory per device
     stays at k × (its shard of the model).
 
+    ``shard_spec`` (a :class:`repro.core.shard_aggregation.ShardSpec`)
+    selects the shard-local contract: the Weiszfeld iterate and every
+    weighted mean stay per-shard (the weighted k-sums are coordinate-local
+    and bitwise width-invariant), and only the (k,) squared distances and
+    the scalar movement cross shards — ONE small blocked reduction per
+    iterate.  With a trivial spec (None / gspmd) the reductions follow the
+    legacy accumulation order (golden traces stay within tolerance).
+
     Returns a pytree of the same structure without the leading axis.
     """
+    from repro.core.shard_aggregation import blocked_partial_sum
+
     leaves, treedef = jax.tree.flatten(batch_means)
     k = leaves[0].shape[0]
     if weights is None:
@@ -118,31 +129,48 @@ def geometric_median_pytree(batch_means, *,
     weights = weights.astype(jnp.float32)
     w_sum = jnp.maximum(jnp.sum(weights), eps)
 
+    def _wsum(w, l):
+        # weighted sum over the leading k axis as an UNROLLED elementwise
+        # multiply-add chain: each output coordinate gets a fixed expression
+        # tree, so a shard's slice computes exactly the bits of the full
+        # leaf's slice.  Both a dot/tensordot lowering and a fused
+        # broadcast-multiply + sum-over-k are width-sensitive (the compiler
+        # may reassociate or vectorize the k-reduction differently per
+        # coordinate width), which would break the shard-local bit-equality
+        # contract; k is small (<= num_workers) so unrolling is cheap.
+        wf = w.astype(l.dtype)
+        acc = wf[0] * l[0]
+        for i in range(1, l.shape[0]):
+            acc = acc + wf[i] * l[i]
+        return acc
+
     def wmean(ls):
-        return [jnp.tensordot(weights.astype(l.dtype), l, axes=1) / w_sum.astype(l.dtype)
-                for l in ls]
+        return [_wsum(weights, l) / w_sum.astype(l.dtype) for l in ls]
+
+    def _pair_sq(l, yl):
+        diff = (l - yl[None]).astype(jnp.float32)
+        return jnp.sum(diff * diff, axis=tuple(range(1, diff.ndim)))
 
     def sq_dists(ls, y):
         """(k,) squared distances from stacked points to estimate y."""
-        acc = jnp.zeros((k,), jnp.float32)
-        for l, yl in zip(ls, y):
-            diff = (l - yl[None]).astype(jnp.float32)
-            acc = acc + jnp.sum(diff * diff, axis=tuple(range(1, diff.ndim)))
-        return acc
+        return blocked_partial_sum(shard_spec, list(zip(ls, y)), _pair_sq,
+                                   shape=(k,), lead_axes=1)
 
     def step(y):
         d = jnp.sqrt(sq_dists(leaves, y) + eps * eps)        # (k,)
         inv = weights / d
         denom = jnp.maximum(jnp.sum(inv), eps)
-        y_new = [jnp.tensordot((inv / denom).astype(l.dtype), l, axes=1)
-                 for l in leaves]
+        y_new = [_wsum(inv / denom, l) for l in leaves]
         return y_new
 
     y0 = wmean(leaves)
 
+    def _pair_delta(x, z):
+        return jnp.sum((x - z).astype(jnp.float32) ** 2)
+
     def flat_delta(a, b):
-        return sum(jnp.sum((x - z).astype(jnp.float32) ** 2)
-                   for x, z in zip(a, b))
+        return blocked_partial_sum(shard_spec, list(zip(a, b)), _pair_delta,
+                                   shape=(), lead_axes=0)
 
     def cond(carry):
         _, it, delta = carry
@@ -179,15 +207,23 @@ def trim_weights(norms: jax.Array, *, multiplier: float = 3.0,
     return jnp.where(jnp.sum(w) > 0, w, jnp.ones_like(w))
 
 
-def batch_mean_norms(batch_means) -> jax.Array:
-    """Global L2 norm of each of the k stacked pytree batch means."""
+def batch_mean_norms(batch_means, *, shard_spec=None) -> jax.Array:
+    """Global L2 norm of each of the k stacked pytree batch means.
+
+    With a blocked ``shard_spec`` the squared norms are accumulated as
+    per-shard partials and combined by one ordered (k,)-sized reduction —
+    the only collective a norm-based selection rule needs."""
+    from repro.core.shard_aggregation import blocked_partial_sum
+
     leaves = jax.tree.leaves(batch_means)
     k = leaves[0].shape[0]
-    acc = jnp.zeros((k,), jnp.float32)
-    for l in leaves:
+
+    def _leaf_sq(l):
         lf = l.astype(jnp.float32)
-        acc = acc + jnp.sum(lf * lf, axis=tuple(range(1, lf.ndim)))
-    return jnp.sqrt(acc)
+        return jnp.sum(lf * lf, axis=tuple(range(1, lf.ndim)))
+
+    return jnp.sqrt(blocked_partial_sum(shard_spec, leaves, _leaf_sq,
+                                        shape=(k,), lead_axes=1))
 
 
 @functools.partial(jax.jit, static_argnames=("max_iters",))

@@ -79,7 +79,8 @@ def per_worker_grads(loss_fn: Callable, params, worker_batches, *,
     return grads, losses
 
 
-def aggregate_reported(reported_grads, cfg: RobustConfig, *, key):
+def aggregate_reported(reported_grads, cfg: RobustConfig, *, key,
+                       shard_spec=None):
     """Robust aggregation of already-(possibly-)corrupted reports.
 
     Which config fields an aggregator receives is driven by its registry
@@ -87,6 +88,12 @@ def aggregate_reported(reported_grads, cfg: RobustConfig, *, key):
     hardcoded name list: a newly registered rule declares what it consumes
     and gets it threaded here without touching this dispatch site.  Rules
     take ``**_kw`` so a bundle field they don't consume is swallowed.
+
+    ``shard_spec`` (a :class:`repro.core.shard_aggregation.ShardSpec`)
+    describes how the stacked gradients are partitioned over param shards;
+    it reaches every rule that registered ``needs_shard_spec`` (the
+    norm-based rules whose reductions cross shards — coordinate-wise rules
+    are shard-local without it).
     """
     agg = aggregators.get_aggregator(cfg.aggregator)
     kwargs: dict[str, Any] = {}
@@ -104,10 +111,13 @@ def aggregate_reported(reported_grads, cfg: RobustConfig, *, key):
                       trim_multiplier=cfg.trim_multiplier,
                       max_iters=cfg.gmom_max_iters, tol=cfg.gmom_tol,
                       round_backend=cfg.round_backend)
+    if agg.needs_shard_spec and shard_spec is not None:
+        kwargs.update(shard_spec=shard_spec)
     return agg(reported_grads, **kwargs)
 
 
-def aggregate(stacked_grads, cfg: RobustConfig, *, key, round_index):
+def aggregate(stacked_grads, cfg: RobustConfig, *, key, round_index,
+              shard_spec=None):
     """Attack simulation + robust aggregation.  Pure; jit-friendly."""
     mask = byzantine.sample_byzantine_mask(
         key, cfg.num_workers, cfg.num_byzantine,
@@ -115,7 +125,7 @@ def aggregate(stacked_grads, cfg: RobustConfig, *, key, round_index):
     attack = byzantine.get_attack(cfg.attack)
     attack_kwargs = dict(cfg.attack_kwargs)
     reported = attack(stacked_grads, mask, key, **attack_kwargs)
-    return aggregate_reported(reported, cfg, key=key)
+    return aggregate_reported(reported, cfg, key=key, shard_spec=shard_spec)
 
 
 def make_robust_train_step(loss_fn: Callable, optimizer, cfg: RobustConfig, *,
@@ -342,5 +352,42 @@ def make_shardmap_aggregate(cfg: RobustConfig, mesh, worker_axes=("data",)):
         return geometric_median_pytree(
             means, weights=weights, max_iters=cfg.gmom_max_iters,
             tol=cfg.gmom_tol)
+
+    return agg_local
+
+
+def make_sharded_aggregate(cfg: RobustConfig, mesh=None, *,
+                           axis: str = "model",
+                           num_shards: int | None = None):
+    """Shard-LOCAL aggregation body for code running inside ``shard_map``
+    with the stacked gradients partitioned over ``axis`` (the ZeRO-1 layout:
+    each device holds every worker's slice of its param shard).
+
+    Complements :func:`make_shardmap_aggregate`, which hand-schedules the
+    *data*-axis collectives for gmom only; this one covers EVERY registered
+    rule over the *model* axis via the blocked-reduction contract
+    (``repro.core.shard_aggregation``): coordinate-wise rules run with no
+    collectives at all, norm-based rules all-reduce per-shard partial
+    squared norms.  The result is bit-identical to the ``"virtual"``-mode
+    single-device oracle on the gathered gradients — the testable form of
+    "sharded and gathered aggregation agree exactly"
+    (tests/test_shardmap_aggregate.py).
+
+    Returns ``fn(stacked_local_grads, key) -> agg_grad_shard`` where each
+    leaf of ``stacked_local_grads`` is the local LAST-dim slice (leading
+    worker axis intact) and the returned aggregate is likewise the local
+    shard.
+    """
+    if num_shards is None:
+        if mesh is None:
+            raise ValueError("make_sharded_aggregate needs a mesh or an "
+                             "explicit num_shards")
+        num_shards = mesh.shape[axis]
+    from repro.core.shard_aggregation import ShardSpec
+    spec = ShardSpec(num_shards=num_shards, mode="shard_map", axis=axis)
+
+    def agg_local(stacked_local, key):
+        return aggregate_reported(stacked_local, cfg, key=key,
+                                  shard_spec=spec)
 
     return agg_local

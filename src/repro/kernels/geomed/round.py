@@ -66,8 +66,13 @@ TILE_D = 512
 VMEM_BUDGET_BYTES = 8 * 2**20   # conservative half of a ~16 MiB/core VMEM
 
 
-def default_use_pallas() -> bool:
-    return jax.default_backend() == "tpu"
+def default_use_pallas(target_backend: str | None = None) -> bool:
+    """Whether the fused Pallas kernel is the default lowering.
+
+    ``target_backend`` names the backend the program will RUN on (threaded
+    from a ShardSpec by ``aggregators.resolve_round_backend``); None falls
+    back to the live host backend."""
+    return (target_backend or jax.default_backend()) == "tpu"
 
 
 def _pad_axis(x, tile: int, axis: int):

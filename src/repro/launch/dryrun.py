@@ -133,6 +133,7 @@ def lower_pair(arch_or_cfg, shape_name: str, *, multi_pod: bool = False,
                mesh=None, num_groups: int = 4, microbatches: int = 1,
                fsdp: bool = True, rc: RobustConfig | None = None,
                schedule: byzantine.AttackSchedule | None = None,
+               gather_grads: bool = False,
                verbose: bool = True) -> DryrunArtifacts:
     """Lower + compile one (arch, shape, mesh) and return all artifacts.
 
@@ -142,6 +143,13 @@ def lower_pair(arch_or_cfg, shape_name: str, *, multi_pod: bool = False,
     through the step (the lowered function then takes/returns the
     adversary's carried state).  Train shapes only; both default to the
     historical gmom + sign_flip dry-run configuration.
+
+    ``gather_grads=True`` lowers the dense O(d)-per-device BASELINE: the
+    stacked gradients are constrained fully replicated before aggregation
+    (the gather the pre-shard-local code implied) and the aggregation runs
+    with a trivial ShardSpec.  Default False keeps gradients partitioned
+    over ``model`` end-to-end — the shard-local path whose peak memory the
+    pod sweep's big-model cells gate against the gathered baseline.
     """
     if mesh is None:
         mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
@@ -163,12 +171,19 @@ def lower_pair(arch_or_cfg, shape_name: str, *, multi_pod: bool = False,
             oshard = sharding.opt_state_shardings(opt_s, params_s, mesh,
                                                   cfg, fsdp=fsdp)
             bshard = sharding.batch_shardings(batch, mesh)
-            gshard = sharding.stacked_grad_shardings(params_s, mesh, cfg,
-                                                     fsdp=fsdp)
+            if gather_grads:
+                gshard = sharding.gathered_grad_shardings(params_s, mesh)
+                spec = dataclasses.replace(
+                    sharding.grad_shard_spec(mesh, cfg), num_shards=1)
+            else:
+                gshard = sharding.stacked_grad_shardings(params_s, mesh, cfg,
+                                                         fsdp=fsdp)
+                spec = sharding.grad_shard_spec(mesh, cfg)
             step_fn = steps.make_group_train_step(cfg, rc, opt,
                                                   microbatches=microbatches,
                                                   grad_shardings=gshard,
-                                                  schedule=schedule)
+                                                  schedule=schedule,
+                                                  shard_spec=spec)
             key_s = jax.ShapeDtypeStruct((2,), jax.numpy.uint32)
             round_s = jax.ShapeDtypeStruct((), jax.numpy.int32)
             rep = sharding.replicated(mesh)
@@ -249,6 +264,7 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
                 mesh=None, num_groups: int = 4, microbatches: int = 1,
                 fsdp: bool = True, verbose: bool = True,
                 rc: RobustConfig | None = None, schedule=None,
+                gather_grads: bool = False,
                 return_artifacts: bool = False):
     """Lower+compile one (arch, shape, mesh); returns a RooflineRecord.
 
@@ -257,7 +273,8 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     """
     art = lower_pair(arch, shape_name, multi_pod=multi_pod, mesh=mesh,
                      num_groups=num_groups, microbatches=microbatches,
-                     fsdp=fsdp, rc=rc, schedule=schedule, verbose=verbose)
+                     fsdp=fsdp, rc=rc, schedule=schedule,
+                     gather_grads=gather_grads, verbose=verbose)
     if return_artifacts:
         return art.record, art.lowered, art.compiled
     return art.record

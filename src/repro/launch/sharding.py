@@ -247,6 +247,29 @@ def replicated(mesh):
     return NamedSharding(mesh, P())
 
 
+def gathered_grad_shardings(params, mesh):
+    """Fully-replicated shardings for the stacked (k, *param) gradients —
+    the dense O(d)-per-device baseline the shard-local contract replaces.
+    Constraining the scan output to this forces the gather the legacy
+    aggregation path implied; it exists so the pod sweep can RECORD that
+    baseline's peak memory next to the partitioned path (the
+    ``grad_mode="gathered"`` cells in BENCH_pod_sweeps.json)."""
+    return jax.tree.map(lambda _: replicated(mesh), params)
+
+
+def grad_shard_spec(mesh, cfg: ModelConfig | None = None, *,
+                    mode: str = "gspmd", target_backend: str | None = "tpu"):
+    """The ``ShardSpec`` matching :func:`stacked_grad_shardings`: stacked
+    gradients partitioned over the mesh ``model`` axis (via TP/FSDP param
+    dims), aggregation reductions left to GSPMD (``mode="gspmd"``), and
+    ``round_backend`` dispatch pinned to the mesh's TARGET backend so
+    dry-run lowering from a CPU host resolves the production path."""
+    from repro.core.shard_aggregation import ShardSpec
+    model_n = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    return ShardSpec(num_shards=model_n, mode=mode, axis="model",
+                     target_backend=target_backend)
+
+
 def opt_state_shardings(opt_state, params, mesh,
                         cfg: ModelConfig | None = None, *, fsdp: bool = True):
     pshard = param_shardings(params, mesh, cfg, fsdp=fsdp)

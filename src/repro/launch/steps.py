@@ -128,14 +128,26 @@ def abstract_opt_state(optimizer, params_struct):
 
 def make_group_train_step(cfg: ModelConfig, rc: RobustConfig, optimizer, *,
                           microbatches: int = 1, grad_shardings=None,
-                          schedule: byzantine.AttackSchedule | None = None):
+                          schedule: byzantine.AttackSchedule | None = None,
+                          shard_spec=None):
     """Group-mode robust train step (the production/dry-run path).
 
     rc.num_workers is interpreted as k (the number of batches); the attack
     mask has k entries with rc.num_byzantine contaminated batches.
     ``grad_shardings`` (optional pytree of NamedSharding for the stacked
     (k, *param) gradients) anchors the scan output so the cross-data
-    gradient reduction lowers as reduce-scatter into the optimizer layout.
+    gradient reduction lowers as reduce-scatter into the optimizer layout —
+    and, crucially, keeps the gradients PARTITIONED over the model axis
+    end-to-end: aggregation consumes the per-shard slices directly, no
+    O(d) gather ever materializes (the shard-local contract,
+    ``repro.core.shard_aggregation``).
+
+    ``shard_spec`` (a ``ShardSpec``, usually
+    ``launch.sharding.grad_shard_spec(mesh, cfg)``) reaches
+    ``aggregate_reported`` so norm-based rules route their reductions
+    through the blocked contract and ``round_backend`` auto-dispatch keys
+    off the TARGET backend instead of the lowering host's — a dry-run sweep
+    lowering TPU programs from a CPU host resolves the production path.
 
     Aggregation dispatches through ``robust_train.aggregate_reported`` —
     the same registry path the scenario engine uses — so ``rc.aggregator``
@@ -203,7 +215,8 @@ def make_group_train_step(cfg: ModelConfig, rc: RobustConfig, optimizer, *,
         else:
             reported, mask, attack_state = schedule.apply(
                 grads, key, round_index, attack_state)
-        agg = aggregate_reported(reported, rc, key=key)
+        agg = aggregate_reported(reported, rc, key=key,
+                                 shard_spec=shard_spec)
         updates, opt_state = optimizer.update(agg, opt_state, params)
         params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
                               params, updates)

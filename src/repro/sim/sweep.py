@@ -102,6 +102,11 @@ class PodScenario:
     num_groups: int = 4          # k — batch-group count
     num_byzantine: int = 1       # q — contaminated batch means per round
     microbatches: int = 1
+    # "sharded" keeps the stacked gradients partitioned over the model axis
+    # end-to-end (the shard-local contract — O(d/shards) server memory);
+    # "gathered" constrains them fully replicated before aggregation (the
+    # dense O(d) baseline the big-model gate compares against).
+    grad_mode: str = "sharded"
 
     def robust_config(self) -> RobustConfig:
         """The injected aggregation pipeline config (num_batches == k: each
@@ -161,6 +166,48 @@ for _mesh in POD_MESHES:
 
 
 # ---------------------------------------------------------------------------
+# big-model cells: the O(d/shards) server-memory claim, made a gate.
+#
+# qwen2-72b is the smallest registered config where a gathered (k, d)
+# stacked-gradient block cannot fit one chip (d ≈ 72e9 params); these cells
+# lower the SAME group-mode train step at that scale with the gradients
+# kept partitioned (grad_mode="sharded", the default) and — for gmom — once
+# more with the dense gathered baseline, so the checked-in record holds
+# both peak-memory numbers side by side and ``shard_scaling_problems``
+# gates their ratio.  krum rides along because PR 5 recorded its flattened
+# distance accumulation as the ~4.5× peak-memory outlier — the gram-
+# expansion rewrite must keep it within KRUM_PEAK_MAX_RATIO of gmom here.
+
+BIG_MODEL_ARCH = "qwen2-72b"
+
+register(PodScenario(
+    name=_n("16x16", BIG_MODEL_ARCH, "gmom", "sign_flip", "static"),
+    aggregator="gmom", attack="sign_flip", schedule="static",
+    mesh="16x16", arch=BIG_MODEL_ARCH))
+register(PodScenario(
+    name=_n("16x16", BIG_MODEL_ARCH, "krum", "sign_flip", "static"),
+    aggregator="krum", attack="sign_flip", schedule="static",
+    mesh="16x16", arch=BIG_MODEL_ARCH))
+register(PodScenario(
+    name=_n("16x16", BIG_MODEL_ARCH, "coord_median", "sign_flip", "static"),
+    aggregator="coord_median", attack="sign_flip", schedule="static",
+    mesh="16x16", arch=BIG_MODEL_ARCH))
+register(PodScenario(
+    name=_n("16x16", BIG_MODEL_ARCH, "gmom", "sign_flip", "static")
+    + "/gathered",
+    aggregator="gmom", attack="sign_flip", schedule="static",
+    mesh="16x16", arch=BIG_MODEL_ARCH, grad_mode="gathered"))
+
+#: the big-model cells (outside the full minitron matrix product)
+BIG_MODEL_SCENARIOS = (
+    _n("16x16", BIG_MODEL_ARCH, "gmom", "sign_flip", "static"),
+    _n("16x16", BIG_MODEL_ARCH, "krum", "sign_flip", "static"),
+    _n("16x16", BIG_MODEL_ARCH, "coord_median", "sign_flip", "static"),
+    _n("16x16", BIG_MODEL_ARCH, "gmom", "sign_flip", "static") + "/gathered",
+)
+
+
+# ---------------------------------------------------------------------------
 # lowering one cell
 
 def lower_scenario(ps: PodScenario, *, mesh=None, cfg=None, shape=None,
@@ -181,12 +228,13 @@ def lower_scenario(ps: PodScenario, *, mesh=None, cfg=None, shape=None,
         multi_pod=MESH_MULTI_POD[ps.mesh], mesh=mesh,
         num_groups=ps.num_groups, microbatches=ps.microbatches,
         rc=ps.robust_config(), schedule=ps.build_schedule(),
+        gather_grads=(ps.grad_mode == "gathered"),
         verbose=verbose)
     entry = analysis.sweep_entry(art.record, scenario=ps.name)
     entry.update(
         aggregator=ps.aggregator, attack=ps.attack, schedule=ps.schedule,
         round_backend=ps.round_backend, num_groups=ps.num_groups,
-        num_byzantine=ps.num_byzantine,
+        num_byzantine=ps.num_byzantine, grad_mode=ps.grad_mode,
         compile_seconds=round(art.compile_seconds, 2))
     return entry
 
@@ -216,6 +264,10 @@ def run_sweep(names: list[str] | None = None, *,
         },
         "default_arch": DEFAULT_ARCH,
         "default_shape": DEFAULT_SHAPE,
+        "big_model": {
+            "arch": BIG_MODEL_ARCH,
+            "scenarios": list(BIG_MODEL_SCENARIOS),
+        },
         "sweep_seconds": round(time.time() - t0, 1),
         "scenarios": scenarios,
     }
@@ -283,6 +335,63 @@ def compare_payloads(record: dict, fresh: dict, *,
             f"{name}: stale record entry (scenario no longer swept) — "
             "re-record with `python -m repro.sim.sweep --all`")
     return problems, notes
+
+
+#: gathered-baseline gmom peak memory must exceed the sharded cell's by at
+#: least this factor on the big-model mesh — the recorded, gated form of
+#: "server peak memory drops from O(d) to O(d/shards)".  The 16×16 mesh has
+#: |model| = 16 shards; 4× leaves generous headroom for the activations,
+#: params, and optimizer state both lowerings share.
+SHARD_MEMORY_MIN_RATIO = 4.0
+
+#: krum's sharded peak must stay within this factor of sharded gmom's —
+#: the gram-expansion rewrite's regression bound (PR 5 recorded the old
+#: flattened f32 accumulation at ~3.7-4.5× gmom's peak).
+KRUM_PEAK_MAX_RATIO = 1.5
+
+
+def shard_scaling_problems(scenarios: dict) -> list[str]:
+    """Gate the big-model shard-local claims on a fresh sweep payload.
+
+    * the gathered gmom cell's compiled peak memory must be at least
+      ``SHARD_MEMORY_MIN_RATIO`` × the sharded cell's (O(d) vs O(d/shards));
+    * sharded krum's peak must stay within ``KRUM_PEAK_MAX_RATIO`` × sharded
+      gmom's (no return of the flattened-copy blowup).
+
+    Cells absent from the payload are skipped (filtered --check runs and
+    the --fresh-from CLI wiring tests sweep subsets); the registry/record
+    completeness check in :func:`compare_payloads` and check_docs.py keeps
+    the cells from disappearing silently.
+    """
+    problems: list[str] = []
+
+    def peak(name):
+        e = scenarios.get(name)
+        return e.get("peak_memory_bytes") if e else None
+
+    base = _n("16x16", BIG_MODEL_ARCH, "gmom", "sign_flip", "static")
+    g_sharded = peak(base)
+    g_gathered = peak(base + "/gathered")
+    k_sharded = peak(_n("16x16", BIG_MODEL_ARCH, "krum", "sign_flip",
+                        "static"))
+
+    if g_sharded and g_gathered:
+        ratio = g_gathered / g_sharded
+        if ratio < SHARD_MEMORY_MIN_RATIO:
+            problems.append(
+                f"big-model shard scaling: gathered gmom peak "
+                f"{g_gathered:.3e} B is only {ratio:.2f}× the sharded "
+                f"{g_sharded:.3e} B (< {SHARD_MEMORY_MIN_RATIO:.1f}×) — "
+                "the O(d/shards) server-memory claim regressed")
+    if g_sharded and k_sharded:
+        ratio = k_sharded / g_sharded
+        if ratio > KRUM_PEAK_MAX_RATIO:
+            problems.append(
+                f"big-model krum peak {k_sharded:.3e} B is {ratio:.2f}× "
+                f"sharded gmom's {g_sharded:.3e} B "
+                f"(> {KRUM_PEAK_MAX_RATIO:.1f}×) — the flattened-copy "
+                "blowup is back")
+    return problems
 
 
 def load_record(path: str = BENCH_PATH) -> dict:
@@ -409,6 +518,7 @@ def main(argv=None) -> int:
             record, fresh,
             rtol_collective=args.rtol_collective,
             rtol_memory=args.rtol_memory)
+        problems += shard_scaling_problems(fresh.get("scenarios", {}))
         for n in notes:
             print(f"sweep note: {n}")
         for pr in problems:

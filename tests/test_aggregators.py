@@ -301,3 +301,65 @@ def test_worker_batch_ids_inverts_assignment_matrix():
         s = assignment_matrix(grouping)
         for w in range(m):
             assert s[ids[w], w] == 1.0, (m, k, scheme, w)
+
+
+# ---------------------------------------------------------------------------
+# batch-mean dtype contract: both grouping paths accumulate in f32
+
+def test_bf16_batch_means_match_f32_accumulation():
+    """Even (k | m) and uneven (k ∤ m) batch means both accumulate in f32
+    and cast once — bitwise equal to computing the means in f32 and casting
+    the result.  Previously the even path meant directly in bf16 and
+    diverged from the uneven path's f32 contraction."""
+    rng = np.random.default_rng(3)
+    g32 = jnp.asarray(rng.normal(size=(12, 7)).astype(np.float32))
+    gb = {"w": g32.astype(jnp.bfloat16)}
+    for k in (4, 5):                       # 12 % 4 == 0, 12 % 5 != 0
+        got = aggregators.batch_means(gb, k)["w"]
+        want = jax.tree.map(
+            lambda x: x.astype(jnp.bfloat16),
+            aggregators.batch_means(
+                {"w": gb["w"].astype(jnp.float32)}, k))["w"]
+        assert got.dtype == jnp.bfloat16
+        assert np.array_equal(np.asarray(got, np.float32),
+                              np.asarray(want, np.float32)), k
+
+
+def test_bf16_batch_means_even_uneven_consistent():
+    """A worker that lands alone in a batch contributes the identical bits
+    under even and uneven groupings (the shared f32-accumulate path)."""
+    rng = np.random.default_rng(4)
+    g = jnp.asarray(rng.normal(size=(7, 5)).astype(np.float32)).astype(
+        jnp.bfloat16)
+    uneven = aggregators.batch_means({"w": g}, 4)["w"]   # sizes 2,2,2,1
+    # last batch is worker 6 alone: the mean of one element must be itself
+    assert np.array_equal(np.asarray(uneven[3], np.float32),
+                          np.asarray(g[6], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# round-backend dispatch: target backend + partitioned gradients
+
+def test_resolve_round_backend_targets():
+    # auto on a CPU host resolves the host path...
+    assert aggregators.resolve_round_backend(
+        "auto", num_batches=4) == "reference"
+    # ...but a TPU *target* resolves the production fused path even when
+    # lowering from a CPU host (dry-run sweeps).
+    assert aggregators.resolve_round_backend(
+        "auto", num_batches=4, target_backend="tpu") == "fused"
+    assert aggregators.resolve_round_backend(
+        "auto", num_batches=4, target_backend="cpu") == "reference"
+
+
+def test_resolve_round_backend_partitioned_forces_reference():
+    # partitioned grads veto the fused kernel (its leaf concat = a gather),
+    # even on a TPU target ...
+    assert aggregators.resolve_round_backend(
+        "auto", num_batches=4, target_backend="tpu",
+        partitioned=True) == "reference"
+    # ... silently for auto, with a warning for an explicit request
+    with pytest.warns(UserWarning, match="partitioned"):
+        got = aggregators.resolve_round_backend(
+            "fused", num_batches=4, target_backend="tpu", partitioned=True)
+    assert got == "reference"

@@ -57,7 +57,8 @@ def _fake_payload(names, **kw) -> dict:
 def test_registry_covers_full_matrix_on_both_meshes():
     names = sweep.available()
     expected = (len(sweep.POD_ATTACKS) * len(sweep.POD_SCHEDULES)
-                * len(sweep.POD_AGGREGATORS) * len(sweep.POD_MESHES))
+                * len(sweep.POD_AGGREGATORS) * len(sweep.POD_MESHES)
+                + len(sweep.BIG_MODEL_SCENARIOS))
     assert len(names) == expected
     for mesh in sweep.POD_MESHES:
         for agg in sweep.POD_AGGREGATORS:
@@ -68,6 +69,24 @@ def test_registry_covers_full_matrix_on_both_meshes():
                     ps = sweep.get_pod_scenario(name)
                     assert (ps.mesh, ps.aggregator, ps.attack, ps.schedule) \
                         == (mesh, agg, attack, schedule)
+
+
+def test_big_model_cells_registered():
+    """The qwen2-72b shard-scaling cells: sharded gmom/krum/coord_median
+    plus the gathered-baseline gmom twin."""
+    for name in sweep.BIG_MODEL_SCENARIOS:
+        ps = sweep.get_pod_scenario(name)
+        assert ps.arch == sweep.BIG_MODEL_ARCH
+        assert ps.mesh == "16x16"
+        expect = "gathered" if name.endswith("/gathered") else "sharded"
+        assert ps.grad_mode == expect, name
+    gathered = [n for n in sweep.BIG_MODEL_SCENARIOS
+                if sweep.get_pod_scenario(n).grad_mode == "gathered"]
+    assert len(gathered) == 1
+    assert sweep.get_pod_scenario(gathered[0]).aggregator == "gmom"
+    aggs = {sweep.get_pod_scenario(n).aggregator
+            for n in sweep.BIG_MODEL_SCENARIOS}
+    assert {"gmom", "krum", "coord_median"} <= aggs
 
 
 def test_registry_rejects_unknown_and_duplicate():
@@ -141,6 +160,56 @@ def test_small_drift_within_tolerance_passes():
     fresh["scenarios"][names[0]]["peak_memory_bytes"] *= 1.05
     problems, _ = sweep.compare_payloads(record, fresh)
     assert problems == []
+
+
+def _fake_big_model_payload(*, gmom_peak=1.0e10, gathered_peak=None,
+                            krum_peak=None) -> dict:
+    base = f"pod/16x16/{sweep.BIG_MODEL_ARCH}/gmom/sign_flip/static"
+    krum = f"pod/16x16/{sweep.BIG_MODEL_ARCH}/krum/sign_flip/static"
+    if gathered_peak is None:
+        gathered_peak = gmom_peak * sweep.SHARD_MEMORY_MIN_RATIO * 2
+    if krum_peak is None:
+        krum_peak = gmom_peak * 1.1
+    scenarios = {
+        base: _fake_entry(base, peak=gmom_peak),
+        base + "/gathered": _fake_entry(base + "/gathered",
+                                        peak=gathered_peak),
+        krum: _fake_entry(krum, peak=krum_peak),
+    }
+    scenarios[base + "/gathered"]["grad_mode"] = "gathered"
+    return {"scenarios": scenarios}
+
+
+def test_shard_scaling_gate_passes_on_clean_ratios():
+    payload = _fake_big_model_payload()
+    assert sweep.shard_scaling_problems(payload["scenarios"]) == []
+
+
+def test_shard_scaling_gate_flags_lost_memory_ratio():
+    payload = _fake_big_model_payload(
+        gmom_peak=1.0e10,
+        gathered_peak=1.0e10 * (sweep.SHARD_MEMORY_MIN_RATIO - 1))
+    problems = sweep.shard_scaling_problems(payload["scenarios"])
+    assert len(problems) == 1
+    assert "O(d/shards)" in problems[0]
+
+
+def test_shard_scaling_gate_flags_krum_blowup():
+    payload = _fake_big_model_payload(
+        gmom_peak=1.0e10,
+        krum_peak=1.0e10 * (sweep.KRUM_PEAK_MAX_RATIO + 1))
+    problems = sweep.shard_scaling_problems(payload["scenarios"])
+    assert len(problems) == 1
+    assert "krum" in problems[0]
+
+
+def test_shard_scaling_gate_skips_absent_cells():
+    """Filtered --check runs / --fresh-from subsets without the big-model
+    cells must not trip the gate."""
+    names = sweep.available()[:2]
+    payload = _fake_payload(names)
+    assert sweep.shard_scaling_problems(payload["scenarios"]) == []
+    assert sweep.shard_scaling_problems({}) == []
 
 
 def test_cli_check_exit_codes(tmp_path):

@@ -99,3 +99,92 @@ def test_shardmap_gmom_matches_gspmd_aggregate():
         env=dict(os.environ, PYTHONPATH=os.path.join(REPO, "src")))
     assert res.returncode == 0, (res.stdout[-800:], res.stderr[-4000:])
     assert "OK" in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# the shard-local contract: sharded (shard_map over the MODEL axis) vs
+# gathered (the single-device "virtual" blocked oracle) aggregation must be
+# BIT-identical for every registered rule × even/uneven grouping × dtype.
+
+BLOCKED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core import RobustConfig, aggregators, aggregate_reported, \\
+        make_sharded_aggregate
+    from repro.core.shard_aggregation import ShardSpec
+    from repro.models.meshctx import shard_map
+
+    m, S = 8, 8
+    mesh = jax.make_mesh((S,), ("model",))
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    base = {"w": jax.random.normal(ks[0], (m, 16), jnp.float32),
+            "b": {"x": jax.random.normal(ks[1], (m, 4, 8), jnp.float32)},
+            "s": jax.random.normal(ks[2], (m,), jnp.float32)}
+
+    def in_spec(x):
+        if x.ndim == 1:
+            return P(None)                       # (m,) — replicated
+        return P(*((None,) * (x.ndim - 1) + ("model",)))
+
+    def out_spec(x):
+        if x.ndim == 0:
+            return P()
+        return P(*((None,) * (x.ndim - 1) + ("model",)))
+
+    in_specs = jax.tree.map(in_spec, base)
+    checked = 0
+    for name in aggregators.available():
+        for k in (4, 3):                          # even / uneven grouping
+            for dt in (jnp.float32, jnp.bfloat16):
+                stacked = jax.tree.map(lambda x: x.astype(dt), base)
+                cfg = RobustConfig(
+                    num_workers=m, num_byzantine=1, num_batches=k,
+                    attack="none", aggregator=name,
+                    gmom_max_iters=8, gmom_tol=1e-7)
+
+                virtual = ShardSpec(num_shards=S, mode="virtual",
+                                    axis="model")
+                gathered = jax.jit(lambda s: aggregate_reported(
+                    s, cfg, key=key, shard_spec=virtual))(stacked)
+
+                agg = make_sharded_aggregate(cfg, mesh)
+                out_specs = jax.tree.map(
+                    out_spec, jax.eval_shape(
+                        lambda s: aggregate_reported(s, cfg, key=key),
+                        stacked))
+                fn = shard_map(agg, mesh=mesh, in_specs=(in_specs, P(None)),
+                               out_specs=out_specs, check_rep=False)
+                sharded = jax.jit(fn)(stacked, key)
+
+                for pa, b in zip(
+                        jax.tree_util.tree_flatten_with_path(gathered)[0],
+                        jax.tree.leaves(sharded)):
+                    path, a = pa
+                    assert a.shape == b.shape and a.dtype == b.dtype, \\
+                        (name, k, str(dt), str(path), a.shape, b.shape)
+                    assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                        "sharded != gathered (bitwise)", name, k, str(dt),
+                        str(path),
+                        float(np.max(np.abs(np.asarray(a, np.float64)
+                                            - np.asarray(b, np.float64)))))
+                checked += 1
+    print("OK", checked)
+""")
+
+
+def test_every_aggregator_sharded_vs_gathered_bit_identical():
+    """shard_map-mode aggregation on 8 model shards returns the same BITS
+    as the gathered virtual-mode blocked oracle, for every registered
+    aggregator × {even k=4, uneven k=3} grouping × {f32, bf16} — the
+    testable form of the acceptance criterion "sharded and gathered
+    aggregation are bit-identical for every registered rule"."""
+    res = subprocess.run(
+        [sys.executable, "-c", BLOCKED_SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env=dict(os.environ, PYTHONPATH=os.path.join(REPO, "src")))
+    assert res.returncode == 0, (res.stdout[-800:], res.stderr[-4000:])
+    assert "OK" in res.stdout
