@@ -14,7 +14,10 @@ Fails (non-zero exit / raised AssertionError from pytest) when:
 * a registered pod-sweep scenario or production mesh (repro.sim.sweep) is
   missing from the checked-in benchmarks/BENCH_pod_sweeps.json, or a
   sweep-matrix axis value (attack/schedule/aggregator/mesh) is missing
-  from the docs/BENCHMARKS.md sweep tables.
+  from the docs/BENCHMARKS.md sweep tables;
+* a repro.verify rule (RV1xx/RV2xx) is missing from the
+  docs/STATIC_ANALYSIS.md catalog, or the catalog documents a rule ID
+  that is no longer registered (stale docs fail too).
 
 Run directly::
 
@@ -94,6 +97,35 @@ def collect_problems() -> list[str]:
                         "speedup <= 1")
 
     problems += _pod_sweep_problems(paper_map)
+    problems += _verify_rules_problems(paper_map)
+    return problems
+
+
+def _verify_rules_problems(paper_map: str) -> list[str]:
+    """The invariant-checker contract: rule registry ⟺ the
+    docs/STATIC_ANALYSIS.md catalog, both directions."""
+    import re
+
+    from repro.verify.rules import RULES
+
+    problems: list[str] = []
+    doc = _read(os.path.join("docs", "STATIC_ANALYSIS.md"))
+
+    for rid in RULES:
+        if f"`{rid}`" not in doc:
+            problems.append(
+                f"verify rule {rid!r} is registered but undocumented in "
+                "docs/STATIC_ANALYSIS.md — add its catalog row")
+    for rid in set(re.findall(r"`(RV\d{3})`", doc)):
+        if rid not in RULES:
+            problems.append(
+                f"docs/STATIC_ANALYSIS.md documents {rid!r} but no such "
+                "rule is registered in repro.verify.rules — remove the "
+                "stale row or restore the rule")
+    if "repro.verify" not in paper_map:
+        problems.append(
+            "docs/PAPER_MAP.md does not anchor `repro.verify` "
+            "(§Thm 3 collective-shape rows)")
     return problems
 
 
@@ -174,8 +206,8 @@ def main() -> int:
         print(f"check_docs: FAILED ({len(problems)} problem(s))")
         return 1
     print("check_docs: ok — registries, PAPER_MAP, README table, "
-          "BENCH_round_kernel.json, and the pod-sweep record/docs are "
-          "consistent")
+          "BENCH_round_kernel.json, the pod-sweep record/docs, and the "
+          "repro.verify rule catalog are consistent")
     return 0
 
 

@@ -77,9 +77,28 @@ from repro.core.geometric_median import (
     batch_mean_norms, geometric_median, geometric_median_pytree, trim_weights)
 from repro.core.grouping import Grouping, make_grouping
 
+# repro: robust-stat — reductions feeding the robust statistics below must
+# accumulate in f32 before casting back (checked by repro.verify RV105).
+
 AggregatorFn = Callable[..., object]   # stacked pytree -> pytree
 
 _REGISTRY: dict[str, "Aggregator"] = {}
+
+# The shard-local contract classes (see repro.core.shard_aggregation and
+# docs/STATIC_ANALYSIS.md).  Every registered rule declares one; the Layer-B
+# contract analyzer (repro.verify.contracts) traces the rule under a
+# partitioned ShardSpec and statically verifies the lowered computation:
+#
+# * "coordinate_wise"  — touches each parameter shard independently: the
+#                        lowered IR must contain ZERO cross-shard collectives;
+# * "norm_based"       — may combine per-shard partials through small,
+#                        d-independent reductions only ((k,)/(m,)/(m,m)
+#                        shaped — the O(k)/O(m²) server-cost shape of
+#                        PAPER.md §Thm 3);
+# * "whole_gradient"   — selects a received gradient verbatim (krum): same
+#                        collective allowance as norm_based (the (m,m)
+#                        partial gram), selection itself is shard-local.
+SHARD_CONTRACTS = ("coordinate_wise", "norm_based", "whole_gradient")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +123,15 @@ class Aggregator:
                                 param shards (norm-based rules whose
                                 reductions cross shards; coordinate-wise
                                 rules are shard-local without one).
+
+    ``shard_contract`` declares which collective footprint the rule is
+    allowed to lower to under a partitioned ShardSpec (one of
+    ``SHARD_CONTRACTS``); the Layer-B analyzer (``repro.verify.contracts``)
+    traces the registered fn and rejects the registration when the lowered
+    IR exceeds the declared class.  The default is ``"coordinate_wise"`` —
+    deliberately the *strictest* class (zero collectives), so an
+    undeclared contract can only ever fail the analyzer loudly, never
+    silently grant a rule more communication than it admits to.
     """
     name: str
     fn: AggregatorFn
@@ -112,6 +140,7 @@ class Aggregator:
     needs_key: bool = False
     needs_grouping: bool = False
     needs_shard_spec: bool = False
+    shard_contract: str = "coordinate_wise"
 
     def __call__(self, stacked_grads, **kw):
         return self.fn(stacked_grads, **kw)
@@ -119,12 +148,18 @@ class Aggregator:
 
 def register(name: str, description: str = "", *,
              needs_num_byzantine: bool = False, needs_key: bool = False,
-             needs_grouping: bool = False, needs_shard_spec: bool = False):
+             needs_grouping: bool = False, needs_shard_spec: bool = False,
+             shard_contract: str = "coordinate_wise"):
+    if shard_contract not in SHARD_CONTRACTS:
+        raise ValueError(
+            f"aggregator {name!r} declares unknown shard_contract "
+            f"{shard_contract!r}; must be one of {SHARD_CONTRACTS}")
     def deco(fn):
         _REGISTRY[name] = Aggregator(
             name=name, fn=fn, description=description,
             needs_num_byzantine=needs_num_byzantine, needs_key=needs_key,
-            needs_grouping=needs_grouping, needs_shard_spec=needs_shard_spec)
+            needs_grouping=needs_grouping, needs_shard_spec=needs_shard_spec,
+            shard_contract=shard_contract)
         return fn
     return deco
 
@@ -227,11 +262,14 @@ def batch_means(stacked_grads, num_batches: int, *,
 # aggregators
 
 @register("mean", "plain average — the paper's Algorithm 1 (classical BGD), "
-          "breakdown point 0: one Byzantine worker moves it arbitrarily")
+          "breakdown point 0: one Byzantine worker moves it arbitrarily",
+          shard_contract="coordinate_wise")
 def mean_aggregator(stacked_grads, **_kw):
     """Paper Algorithm 1: simple averaging — the failure-free baseline,
     broken by a single Byzantine report (§1.3)."""
-    return jax.tree.map(lambda g: jnp.mean(g, axis=0), stacked_grads)
+    def leaf(g):
+        return jnp.mean(g.astype(jnp.float32), axis=0).astype(g.dtype)
+    return jax.tree.map(leaf, stacked_grads)
 
 
 def resolve_round_backend(round_backend: str | None, *, num_batches: int,
@@ -299,7 +337,7 @@ def _total_dim(stacked) -> int:
 @register("gmom", "geometric median of means — the paper's Algorithm 2 "
           "(fused Pallas round kernel on TPU, jnp reference elsewhere)",
           needs_num_byzantine=True, needs_grouping=True,
-          needs_shard_spec=True)
+          needs_shard_spec=True, shard_contract="norm_based")
 def gmom_aggregator(stacked_grads, *, num_batches: int | None = None,
                     num_byzantine: int = 0, epsilon: float = 0.1,
                     grouping_scheme: str = "contiguous",
@@ -350,7 +388,7 @@ def gmom_aggregator(stacked_grads, *, num_batches: int | None = None,
 
 @register("geomed", "geometric median of the raw worker gradients — the "
           "k = m special case of GMoM (paper §2.1)",
-          needs_shard_spec=True)
+          needs_shard_spec=True, shard_contract="norm_based")
 def geomed_aggregator(stacked_grads, *, max_iters: int = 64,
                       tol: float = 1e-8, shard_spec=None, **_kw):
     """GMoM with every worker its own batch (k = m, paper §2.1): maximal
@@ -360,7 +398,8 @@ def geomed_aggregator(stacked_grads, *, max_iters: int = 64,
 
 
 @register("coordinate_median", "coordinate-wise median — the marginal-"
-          "median baseline of Yin et al. '18")
+          "median baseline of Yin et al. '18",
+          shard_contract="coordinate_wise")
 def coordinate_median_aggregator(stacked_grads, **_kw):
     """Per-coordinate median across workers (the marginal median): robust
     per coordinate, but ignores cross-coordinate structure — the
@@ -370,7 +409,7 @@ def coordinate_median_aggregator(stacked_grads, **_kw):
 
 @register("trimmed_mean", "coordinate-wise beta-trimmed mean "
           "[Yin et al. '18] — related-work baseline",
-          needs_num_byzantine=True)
+          needs_num_byzantine=True, shard_contract="coordinate_wise")
 def trimmed_mean_aggregator(stacked_grads, *, trim_fraction: float = 0.1,
                             num_byzantine: int | None = None, **_kw):
     """Coordinate-wise mean after discarding the t largest and t smallest
@@ -384,7 +423,7 @@ def trimmed_mean_aggregator(stacked_grads, *, trim_fraction: float = 0.1,
         s = jnp.sort(g, axis=0)
         if t > 0:
             s = s[t:m - t]
-        return jnp.mean(s, axis=0)
+        return jnp.mean(s.astype(jnp.float32), axis=0).astype(g.dtype)
 
     return jax.tree.map(leaf, stacked_grads)
 
@@ -392,7 +431,8 @@ def trimmed_mean_aggregator(stacked_grads, *, trim_fraction: float = 0.1,
 @register("krum", "Krum selection rule [BMGS17] — the paper's closest "
           "related work; picks one whole gradient via the shard-local "
           "‖a‖²+‖b‖²−2a·b gram expansion (no flattened f32 copies)",
-          needs_num_byzantine=True, needs_shard_spec=True)
+          needs_num_byzantine=True, needs_shard_spec=True,
+          shard_contract="whole_gradient")
 def krum_aggregator(stacked_grads, *, num_byzantine: int = 0,
                     shard_spec=None, **_kw):
     """Krum (Blanchard et al. '17): return the single worker gradient with
@@ -445,7 +485,7 @@ def krum_aggregator(stacked_grads, *, num_byzantine: int = 0,
 @register("norm_clip_mean",
           "mean of gradients clipped to the median norm — KNOWN-UNSOUND "
           "vs small-norm attacks (alie, norm_stealth, inner_product)",
-          needs_shard_spec=True)
+          needs_shard_spec=True, shard_contract="norm_based")
 def norm_clip_mean_aggregator(stacked_grads, *, clip_multiplier: float = 1.0,
                               shard_spec=None, **_kw):
     """Mean of gradients clipped to ``clip_multiplier x median`` norm.
@@ -465,8 +505,8 @@ def norm_clip_mean_aggregator(stacked_grads, *, clip_multiplier: float = 1.0,
     scale = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-12))
 
     def leaf(g):
-        s = scale.astype(g.dtype).reshape((-1,) + (1,) * (g.ndim - 1))
-        return jnp.mean(g * s, axis=0)
+        s = scale.reshape((-1,) + (1,) * (g.ndim - 1))
+        return jnp.mean(g.astype(jnp.float32) * s, axis=0).astype(g.dtype)
 
     return jax.tree.map(leaf, stacked_grads)
 
@@ -482,7 +522,7 @@ def norm_clip_mean_aggregator(stacked_grads, *, clip_multiplier: float = 1.0,
           "paper §6 rule 1: average a random subset of the gradients "
           "(defends only the RELAXED adversary that cannot see the "
           "server's random bits — fails vs the paper's omniscient model)",
-          needs_key=True)
+          needs_key=True, shard_contract="coordinate_wise")
 def random_select_aggregator(stacked_grads, *, key=None,
                              subset_fraction: float = 0.5, **_kw):
     """Average a uniformly random subset (paper §6, rule 1).  Only defends
@@ -505,8 +545,9 @@ def random_select_aggregator(stacked_grads, *, key=None,
     sel = bottom_k_mask(scores, n_sel)     # exactly n_sel, even under ties
 
     def leaf(g):
-        s = sel.astype(g.dtype).reshape((-1,) + (1,) * (g.ndim - 1))
-        return jnp.sum(g * s, axis=0) / jnp.asarray(n_sel, g.dtype)
+        s = sel.reshape((-1,) + (1,) * (g.ndim - 1))
+        acc = jnp.sum(g.astype(jnp.float32) * s, axis=0)
+        return (acc / n_sel).astype(g.dtype)
 
     return jax.tree.map(leaf, stacked_grads)
 
@@ -515,7 +556,8 @@ def random_select_aggregator(stacked_grads, *, key=None,
           "paper §6 rule 2: average the gradients with the smallest l2 "
           "norms — KNOWN-UNSOUND vs small-norm attacks (alie, "
           "norm_stealth); see benchmarks/selection_rules",
-          needs_num_byzantine=True, needs_shard_spec=True)
+          needs_num_byzantine=True, needs_shard_spec=True,
+          shard_contract="norm_based")
 def norm_select_aggregator(stacked_grads, *, num_byzantine: int = 0,
                            shard_spec=None, **_kw):
     """Average the ``m - q`` smallest-norm gradients (paper §6, rule 2).
@@ -538,8 +580,9 @@ def norm_select_aggregator(stacked_grads, *, num_byzantine: int = 0,
     sel = bottom_k_mask(norms, keep)
 
     def leaf(g):
-        s = sel.astype(g.dtype).reshape((-1,) + (1,) * (g.ndim - 1))
-        return jnp.sum(g * s, axis=0) / jnp.asarray(keep, g.dtype)
+        s = sel.reshape((-1,) + (1,) * (g.ndim - 1))
+        acc = jnp.sum(g.astype(jnp.float32) * s, axis=0)
+        return (acc / keep).astype(g.dtype)
 
     return jax.tree.map(leaf, stacked_grads)
 
@@ -576,7 +619,8 @@ def norm_select_aggregator(stacked_grads, *, num_byzantine: int = 0,
           "coordinate-wise median of the k batch means [Yin et al. '18] — "
           "sound combined rule: per-coordinate order statistics are immune "
           "to the small-norm attacks that break norm_select",
-          needs_num_byzantine=True, needs_grouping=True)
+          needs_num_byzantine=True, needs_grouping=True,
+          shard_contract="coordinate_wise")
 def coord_median_aggregator(stacked_grads, *, num_batches: int | None = None,
                             num_byzantine: int = 0, epsilon: float = 0.1,
                             grouping_scheme: str = "contiguous", **_kw):
@@ -614,7 +658,8 @@ def coord_median_aggregator(stacked_grads, *, num_batches: int | None = None,
           "coordinate-wise q-trimmed mean of the k batch means "
           "[Yin et al. '18] — sound combined rule; trims the q largest AND "
           "q smallest per coordinate, unlike norm_select's one-sided cut",
-          needs_num_byzantine=True, needs_grouping=True)
+          needs_num_byzantine=True, needs_grouping=True,
+          shard_contract="coordinate_wise")
 def coord_trimmed_mean_aggregator(stacked_grads, *,
                                   num_batches: int | None = None,
                                   num_byzantine: int = 0,
@@ -653,7 +698,7 @@ def coord_trimmed_mean_aggregator(stacked_grads, *,
         s = jnp.sort(z, axis=0)
         if t > 0:
             s = s[t:k - t]
-        return jnp.mean(s, axis=0).astype(z.dtype)
+        return jnp.mean(s.astype(jnp.float32), axis=0).astype(z.dtype)
 
     return jax.tree.map(leaf, means)
 
@@ -664,7 +709,7 @@ def coord_trimmed_mean_aggregator(stacked_grads, *,
           "the huge AND the adversarially-small outliers), then GMoM on "
           "the surviving reports",
           needs_num_byzantine=True, needs_grouping=True,
-          needs_shard_spec=True)
+          needs_shard_spec=True, shard_contract="norm_based")
 def norm_filter_gmom_aggregator(stacked_grads, *,
                                 num_batches: int | None = None,
                                 num_byzantine: int = 0, epsilon: float = 0.1,
@@ -756,7 +801,7 @@ def norm_filter_gmom_aggregator(stacked_grads, *,
           "GMoM applied independently per parameter tensor — beyond-paper "
           "blockwise variant (DESIGN.md §3)",
           needs_num_byzantine=True, needs_grouping=True,
-          needs_shard_spec=True)
+          needs_shard_spec=True, shard_contract="norm_based")
 def gmom_per_leaf_aggregator(stacked_grads, *, num_batches: int | None = None,
                              num_byzantine: int = 0, epsilon: float = 0.1,
                              grouping_scheme: str = "contiguous",

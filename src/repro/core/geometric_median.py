@@ -25,6 +25,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+# repro: bit-stable — the pytree Weiszfeld is part of the shard-local
+# bit-equality contract (tests/test_shardmap_aggregate.py): reductions over
+# the stacked k/member axis must stay unrolled multiply-add chains
+# (_wsum) or route through blocked_partial_sum (repro.verify RV101/RV105).
+
 
 class WeiszfeldState(NamedTuple):
     y: jax.Array          # current estimate, shape (d,) or pytree-flattened

@@ -31,6 +31,10 @@ from repro.core import aggregators, byzantine
 from repro.core.geometric_median import (
     batch_mean_norms, geometric_median_pytree, trim_weights)
 
+# repro: train-scan — the multi-round scan carry below is the bit-exact
+# resume surface: every carry element must be a TrainState field (PR 2
+# checkpoint contract, repro.verify RV106).
+
 
 @dataclasses.dataclass(frozen=True)
 class RobustConfig:

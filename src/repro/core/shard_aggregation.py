@@ -54,6 +54,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+# repro: bit-stable — reductions in this module must keep a fixed expression
+# tree across fusion contexts: use the unrolled chain_sum idiom, never
+# jnp.sum/jnp.mean over the shard/member axis (repro.verify RV101/RV105).
+
 _MODES = ("gspmd", "shard_map", "virtual")
 
 

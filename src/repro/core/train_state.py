@@ -164,7 +164,11 @@ def restore_train_state(directory: str, step: int, example_params,
         params=example_params, opt_state=example_opt_state,
         attack_state=schedule.init_state() if schedule is not None else (),
         round_index=jnp.zeros((), jnp.int32),
-        base_key=jax.random.PRNGKey(0),
+        # shape/dtype placeholder only — the restored checkpoint supplies the
+        # actual key bits.  A PRNGKey(0) literal here reads as a seed and
+        # invites copy-paste into real seeding paths (the PR 5 random_select
+        # bug class, repro.verify RV102); zeros of the raw key layout cannot.
+        base_key=jnp.zeros((2,), jnp.uint32),
         history=_history_example(manifest))
     return checkpoint.restore(directory, step, example,
                               allow_cast=allow_cast)

@@ -82,21 +82,23 @@ def force_host_device_count(count: int = DEFAULT_HOST_DEVICE_COUNT) -> None:
             "force_host_device_count() before any jax device/array use, or "
             "export XLA_FLAGS=--xla_force_host_platform_device_count="
             f"{count} before starting python.")
+    # Normalize rather than append: XLA_FLAGS may already carry the flag —
+    # once (an exported =8 from a test shell), or several times (repeated
+    # invocation under the old append logic, or a caller stacking exports).
+    # XLA's flag parsing makes duplicate occurrences ambiguous, so strip
+    # every occurrence and emit exactly one with the effective count (the
+    # max of every pre-existing value and the request — a pre-existing
+    # smaller count would make the production meshes fail later with a
+    # confusing mesh-size error).  Repeated calls are idempotent: the
+    # rewritten string is identical, including whitespace.
     flags = os.environ.get("XLA_FLAGS", "")
     flag_re = re.compile(
         r"--xla_force_host_platform_device_count=(\d+)")
-    m = flag_re.search(flags)
-    if m is not None:
-        # a pre-existing smaller count (e.g. an exported =8 from a test
-        # shell) would make the production meshes fail later with a
-        # confusing mesh-size error — raise it in place instead.
-        if int(m.group(1)) >= count:
-            return
-        os.environ["XLA_FLAGS"] = flag_re.sub(
-            f"--xla_force_host_platform_device_count={count}", flags)
-        return
+    effective = max([int(v) for v in flag_re.findall(flags)] + [count])
+    stripped = " ".join(flag_re.sub(" ", flags).split())
     os.environ["XLA_FLAGS"] = (
-        flags + f" --xla_force_host_platform_device_count={count}").strip()
+        stripped +
+        f" --xla_force_host_platform_device_count={effective}").strip()
 
 
 def _mesh_name(mesh) -> str:

@@ -29,7 +29,11 @@ def serve_cpu(args):
     params = model_lib.init(jax.random.PRNGKey(args.seed), cfg)
     B = args.batch
     max_len = args.prompt_len + args.new_tokens
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, args.prompt_len),
+    # synthetic prompts draw from the same CLI seed as the params (folded so
+    # the two streams differ) — a fixed literal key here would pin the
+    # prompts across --seed values (repro.verify RV102).
+    prompt_key = jax.random.fold_in(jax.random.PRNGKey(args.seed), 1)
+    prompts = jax.random.randint(prompt_key, (B, args.prompt_len),
                                  0, cfg.vocab_size)
     state = model_lib.init_decode_state(cfg, B, max_len)
     step = jax.jit(lambda s, t, p: model_lib.decode_step(params, cfg, s, t, p))

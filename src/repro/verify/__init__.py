@@ -1,0 +1,12 @@
+"""repro.verify — two-layer invariant checker.
+
+Layer A: AST lint of ``src/`` against the RV1xx rules (no jax import —
+safe anywhere).  Layer B: jaxpr/HLO contract analysis of every registered
+aggregator plus the static VMEM audit (RV2xx; needs an 8-device host
+mesh).  Run as ``python -m repro.verify``; catalog and policy in
+docs/STATIC_ANALYSIS.md.
+"""
+
+from repro.verify.rules import (RULES, Finding, Rule,  # noqa: F401
+                                SourceContext, apply_suppressions)
+from repro.verify.ast_rules import lint_file, lint_paths  # noqa: F401

@@ -1,0 +1,416 @@
+"""Layer A: the AST contract lint (rules RV101–RV106).
+
+Pure ``ast`` — no jax import, no execution of the linted code — so the lint
+runs in milliseconds over all of ``src/`` and is safe to point at arbitrary
+fixture files.  Each rule is a function ``SourceContext -> [Finding]``;
+:func:`lint_file` runs them all and applies the ignore[...] escape hatch.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.verify.rules import Finding, SourceContext, apply_suppressions
+
+_AXIS_FNS = ("sum", "mean")
+_NUMPY_ROOTS = ("jnp", "np", "numpy")
+_DOT_FNS = ("dot", "matmul", "einsum", "tensordot", "vdot", "inner")
+_ENV_MUTATORS = ("setdefault", "update", "pop", "clear")
+
+
+def _attr_chain(node: ast.AST) -> list[str]:
+    """``jax.random.PRNGKey`` -> ["jax", "random", "PRNGKey"]; [] when the
+    expression is not a plain dotted name."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return []
+
+
+def _finding(rule: str, ctx: SourceContext, node: ast.AST,
+             message: str) -> Finding:
+    return Finding(
+        rule=rule, path=ctx.path, line=node.lineno, col=node.col_offset,
+        end_line=getattr(node, "end_lineno", 0) or 0,
+        end_col=getattr(node, "end_col_offset", 0) or 0, message=message)
+
+
+def _axis_literal_has_zero(node: ast.AST | None) -> bool:
+    """axis=0 or axis=(0, ...) with literal ints (negative axes and
+    non-literal axes are out of scope — the shard/member axis is axis 0
+    by the stacking convention)."""
+    if node is None:
+        return False
+    if isinstance(node, ast.Constant):
+        return node.value == 0 and isinstance(node.value, int) \
+            and not isinstance(node.value, bool)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return any(isinstance(e, ast.Constant) and e.value == 0
+                   for e in node.elts)
+    return False
+
+
+def _call_axis(call: ast.Call) -> ast.AST | None:
+    for kw in call.keywords:
+        if kw.arg == "axis":
+            return kw.value
+    if len(call.args) >= 2:       # jnp.sum(x, 0)
+        return call.args[1]
+    return None
+
+
+def _is_numpy_reduce(call: ast.Call) -> bool:
+    chain = _attr_chain(call.func)
+    return (len(chain) >= 2 and chain[-1] in _AXIS_FNS
+            and chain[0] in _NUMPY_ROOTS + ("jax",))
+
+
+def _subtree_has_f32_astype(node: ast.AST) -> bool:
+    """True when the operand subtree visibly up-casts to float32:
+    ``x.astype(jnp.float32)`` / ``.astype("float32")`` / ``np.float32``."""
+    for sub in ast.walk(node):
+        if not (isinstance(sub, ast.Call)
+                and isinstance(sub.func, ast.Attribute)
+                and sub.func.attr == "astype" and sub.args):
+            continue
+        arg = sub.args[0]
+        if isinstance(arg, ast.Constant) and arg.value == "float32":
+            return True
+        chain = _attr_chain(arg)
+        if chain and chain[-1] == "float32":
+            return True
+    return False
+
+
+# --------------------------------------------------------------------------
+# RV101 — no jnp.sum/jnp.mean over the shard/member axis in bit-stable
+# modules (use the unrolled chain helpers of core/shard_aggregation.py).
+
+def rv101(ctx: SourceContext) -> list[Finding]:
+    if not ctx.bit_stable:
+        return []
+    out = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and _is_numpy_reduce(node) \
+                and _axis_literal_has_zero(_call_axis(node)):
+            fn = _attr_chain(node.func)[-1]
+            out.append(_finding(
+                "RV101", ctx, node,
+                f"jnp.{fn}(..., axis=0) over the shard/member axis in a "
+                "bit-stable module — XLA may reassociate it per fusion "
+                "context; use blocked_partial_sum / an unrolled add chain "
+                "(core/shard_aggregation.py)"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# RV102 — no literal PRNGKey(<int>) outside entry points.  Exempt regions:
+# functions named ``main`` and the ``if __name__ == "__main__":`` block.
+
+def _is_main_guard(node: ast.AST) -> bool:
+    if not isinstance(node, ast.If):
+        return False
+    t = node.test
+    return (isinstance(t, ast.Compare)
+            and isinstance(t.left, ast.Name) and t.left.id == "__name__"
+            and any(isinstance(c, ast.Constant) and c.value == "__main__"
+                    for c in t.comparators))
+
+
+def _exempt_spans(ctx: SourceContext) -> list[tuple[int, int]]:
+    spans = []
+    for node in ast.walk(ctx.tree):
+        if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and node.name == "main") or _is_main_guard(node):
+            spans.append((node.lineno, node.end_lineno or node.lineno))
+    return spans
+
+
+def rv102(ctx: SourceContext) -> list[Finding]:
+    spans = _exempt_spans(ctx)
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if not chain:
+            continue
+        is_key_ctor = chain[-1] == "PRNGKey" or (
+            chain[-1] == "key" and "random" in chain[:-1])
+        if not is_key_ctor:
+            continue
+        if not (node.args and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, int)
+                and not isinstance(node.args[0].value, bool)):
+            continue
+        if any(lo <= node.lineno <= hi for lo, hi in spans):
+            continue
+        out.append(_finding(
+            "RV102", ctx, node,
+            f"literal {'.'.join(chain)}({node.args[0].value!r}) outside an "
+            "entry point — thread the key/seed from the caller (the PR 5 "
+            "random_select fixed-subset bug class)"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# RV103 — no import-time os.environ / XLA_FLAGS mutation.  Import-time =
+# any statement that executes when the module is imported: module body,
+# top-level if/try/with/for bodies, and class bodies — everything except
+# function bodies.
+
+def _is_environ(node: ast.AST) -> bool:
+    return _attr_chain(node)[-2:] == ["os", "environ"] or \
+        _attr_chain(node) == ["environ"]
+
+
+class _ImportTimeEnvVisitor(ast.NodeVisitor):
+    def __init__(self, ctx: SourceContext):
+        self.ctx = ctx
+        self.out: list[Finding] = []
+
+    # do not descend into runtime-only scopes
+    def visit_FunctionDef(self, node):       # noqa: N802
+        pass
+
+    def visit_AsyncFunctionDef(self, node):  # noqa: N802
+        pass
+
+    def visit_Lambda(self, node):            # noqa: N802
+        pass
+
+    def _flag(self, node, what: str):
+        self.out.append(_finding(
+            "RV103", self.ctx, node,
+            f"import-time {what} — a later import silently reconfigures an "
+            "already-initialized jax backend (the PR 4 dryrun XLA_FLAGS "
+            "poisoning class); mutate the environment inside an explicit "
+            "entry-point call instead"))
+
+    def visit_Assign(self, node):            # noqa: N802
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Subscript) and _is_environ(tgt.value):
+                self._flag(node, "os.environ[...] assignment")
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node):         # noqa: N802
+        if isinstance(node.target, ast.Subscript) \
+                and _is_environ(node.target.value):
+            self._flag(node, "os.environ[...] augmented assignment")
+        self.generic_visit(node)
+
+    def visit_Delete(self, node):            # noqa: N802
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Subscript) and _is_environ(tgt.value):
+                self._flag(node, "del os.environ[...]")
+        self.generic_visit(node)
+
+    def visit_Call(self, node):              # noqa: N802
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _ENV_MUTATORS \
+                and _is_environ(node.func.value):
+            self._flag(node, f"os.environ.{node.func.attr}(...)")
+        if _attr_chain(node.func)[-2:] == ["os", "putenv"]:
+            self._flag(node, "os.putenv(...)")
+        self.generic_visit(node)
+
+
+def rv103(ctx: SourceContext) -> list[Finding]:
+    v = _ImportTimeEnvVisitor(ctx)
+    v.visit(ctx.tree)
+    return v.out
+
+
+# --------------------------------------------------------------------------
+# RV104 — every aggregators.register call declares a non-empty description
+# and a valid literal shard_contract.
+
+_SHARD_CONTRACTS = ("coordinate_wise", "norm_based", "whole_gradient")
+
+
+def _is_aggregator_register(call: ast.Call, ctx: SourceContext) -> bool:
+    chain = _attr_chain(call.func)
+    if chain[-2:] == ["aggregators", "register"]:
+        return True
+    # bare register(...) only counts inside the registry module itself
+    return chain == ["register"] and \
+        ctx.path.replace(os.sep, "/").endswith("core/aggregators.py")
+
+
+def rv104(ctx: SourceContext) -> list[Finding]:
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and _is_aggregator_register(node, ctx)):
+            continue
+        desc = node.args[1] if len(node.args) >= 2 else next(
+            (kw.value for kw in node.keywords if kw.arg == "description"),
+            None)
+        if desc is None or (isinstance(desc, ast.Constant)
+                            and not str(desc.value).strip()):
+            out.append(_finding(
+                "RV104", ctx, node,
+                "aggregators.register call without a (non-empty) "
+                "description — the registry IS the documentation surface "
+                "(check_docs renders it into README/PAPER_MAP)"))
+        contract = next(
+            (kw.value for kw in node.keywords if kw.arg == "shard_contract"),
+            None)
+        if contract is None:
+            out.append(_finding(
+                "RV104", ctx, node,
+                "aggregators.register call without an explicit "
+                f"shard_contract= (one of {_SHARD_CONTRACTS}) — the Layer-B "
+                "collective analyzer verifies the declared contract"))
+        elif not (isinstance(contract, ast.Constant)
+                  and contract.value in _SHARD_CONTRACTS):
+            out.append(_finding(
+                "RV104", ctx, node,
+                "shard_contract must be a literal from "
+                f"{_SHARD_CONTRACTS} so the contract is statically known"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# RV105 — reductions feeding a robust statistic accumulate in f32.  Scope:
+# robust-stat (and bit-stable) marked modules.  Two shapes:
+#   (a) dot-like calls need preferred_element_type=... or a visible
+#       .astype(float32) on an operand;
+#   (b) member-axis sums/means (axis 0) need a visible .astype(float32)
+#       in the operand subtree.
+
+def rv105(ctx: SourceContext) -> list[Finding]:
+    if not ctx.robust_stat:
+        return []
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        is_dot = (chain[-1:] and chain[-1] in _DOT_FNS
+                  and chain[0] in _NUMPY_ROOTS + ("jax",)) or \
+            chain[-1:] == ["dot_general"]
+        if is_dot:
+            has_pref = any(kw.arg == "preferred_element_type"
+                           for kw in node.keywords)
+            operands_f32 = any(_subtree_has_f32_astype(a)
+                               for a in node.args)
+            if not (has_pref or operands_f32):
+                out.append(_finding(
+                    "RV105", ctx, node,
+                    f"{'.'.join(chain)} feeding a robust statistic without "
+                    "an f32 accumulator — pass "
+                    "preferred_element_type=jnp.float32 or .astype the "
+                    "operands"))
+            continue
+        if _is_numpy_reduce(node) \
+                and _axis_literal_has_zero(_call_axis(node)):
+            if not any(_subtree_has_f32_astype(a) for a in node.args):
+                fn = chain[-1]
+                out.append(_finding(
+                    "RV105", ctx, node,
+                    f"jnp.{fn}(..., axis=0) over the member axis without "
+                    "f32 accumulation — reduce .astype(jnp.float32) "
+                    "operands and cast back at the boundary"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# RV106 — training-scan carry elements must be TrainState-backed names.
+
+_CARRY_ALIASES = {"astate": "attack_state"}
+
+
+def train_state_fields() -> tuple[str, ...]:
+    """TrainState's field names, parsed from core/train_state.py's AST (no
+    import — Layer A never executes repo code)."""
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        os.pardir, "core", "train_state.py")
+    with open(os.path.normpath(path)) as f:
+        tree = ast.parse(f.read())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "TrainState":
+            return tuple(
+                stmt.target.id for stmt in node.body
+                if isinstance(stmt, ast.AnnAssign)
+                and isinstance(stmt.target, ast.Name))
+    raise RuntimeError("TrainState class not found in core/train_state.py")
+
+
+def rv106(ctx: SourceContext,
+          fields: tuple[str, ...] | None = None) -> list[Finding]:
+    if not ctx.train_scan:
+        return []
+    if fields is None:
+        fields = train_state_fields()
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if not (chain[-1:] == ["scan"] and "lax" in chain[:-1]):
+            continue
+        if len(node.args) < 2:
+            continue
+        init = node.args[1]
+        elts = init.elts if isinstance(init, (ast.Tuple, ast.List)) \
+            else [init]
+        for elt in elts:
+            if isinstance(elt, ast.Name):
+                name = _CARRY_ALIASES.get(elt.id, elt.id)
+                if name in fields:
+                    continue
+                out.append(_finding(
+                    "RV106", ctx, elt,
+                    f"scan carry element {elt.id!r} does not map to a "
+                    f"TrainState field {fields} — state riding the carry "
+                    "outside TrainState breaks bit-exact resume (PR 2); "
+                    "add the field to TrainState (fixed structure, array "
+                    "leaves)"))
+            else:
+                out.append(_finding(
+                    "RV106", ctx, elt,
+                    "scan carry element is not a plain name — carry "
+                    "exactly the TrainState-backed values so the "
+                    "checkpoint contract stays auditable"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# driver
+
+_ALL_RULES = (rv101, rv102, rv103, rv104, rv105, rv106)
+
+
+def lint_file(path: str, src: str | None = None) -> list[Finding]:
+    if src is None:
+        with open(path) as f:
+            src = f.read()
+    ctx = SourceContext(path, src)
+    findings: list[Finding] = []
+    for rule in _ALL_RULES:
+        findings.extend(rule(ctx))
+    return sorted(apply_suppressions(findings, ctx),
+                  key=lambda f: (f.line, f.col, f.rule))
+
+
+def lint_paths(paths: list[str]) -> list[Finding]:
+    """Lint every ``.py`` file under each path (files are linted as-is)."""
+    files: list[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            files += [os.path.join(dirpath, f) for f in sorted(filenames)
+                      if f.endswith(".py")]
+    findings: list[Finding] = []
+    for f in sorted(set(files)):
+        findings.extend(lint_file(f))
+    return findings

@@ -1,0 +1,131 @@
+"""``python -m repro.verify`` — the two-layer invariant checker.
+
+Layer A (default: lint all of ``src/``) is pure-AST and runs in
+milliseconds; Layer B traces/compiles every registered aggregator on a
+host-virtualized 8-device mesh and audits the Pallas round kernel's VMEM
+budget.  ``--strict`` turns findings into a non-zero exit (the tier-1 CI
+gate); without it the checker reports and exits 0 (the local
+triage mode).
+
+Exit codes: 0 clean (or non-strict), 1 findings under ``--strict``,
+2 internal error (the checker itself failed — never conflated with a
+finding).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import traceback
+
+from repro.verify.rules import RULES, Finding
+
+_LAYER_B_DEVICES = 8
+
+
+def _default_src_root() -> str:
+    # src/repro/verify/cli.py -> src/
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(here))
+
+
+def run_layer_a(paths: list[str]) -> list[Finding]:
+    from repro.verify.ast_rules import lint_paths
+    return lint_paths(paths)
+
+
+def run_layer_b(*, aggregators_filter: list[str] | None,
+                num_shards_list: list[int], seed: int,
+                hlo_both_scales: bool) -> list[Finding]:
+    from repro.launch.dryrun import force_host_device_count
+    force_host_device_count(_LAYER_B_DEVICES)
+
+    from repro.core import aggregators
+    from repro.verify import contracts, vmem
+
+    names = [n for n in aggregators.available()
+             if not n.startswith("_")]
+    if aggregators_filter:
+        unknown = sorted(set(aggregators_filter) - set(names))
+        if unknown:
+            raise SystemExit(f"unknown aggregator(s): {', '.join(unknown)}")
+        names = [n for n in names if n in aggregators_filter]
+
+    findings: list[Finding] = []
+    for name in names:
+        for num_shards in num_shards_list:
+            print(f"[verify] layer B: {name} × {num_shards} shards",
+                  flush=True)
+            findings.extend(contracts.check_aggregator(
+                name, num_shards=num_shards, seed=seed,
+                hlo_both_scales=hlo_both_scales))
+    findings.extend(vmem.check_vmem_budget())
+    return findings
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.verify",
+        description="two-layer invariant checker "
+                    "(docs/STATIC_ANALYSIS.md)")
+    p.add_argument("--strict", action="store_true",
+                   help="exit 1 when any finding survives (the CI gate)")
+    p.add_argument("--layer", choices=["a", "b", "all"], default="all",
+                   help="which layer(s) to run (default: all)")
+    p.add_argument("--paths", nargs="*", default=None,
+                   help="files/dirs for Layer A (default: the src/ tree)")
+    p.add_argument("--aggregators", nargs="*", default=None,
+                   help="restrict Layer B to these registered names")
+    p.add_argument("--num-shards", type=int, default=4,
+                   help="mesh size for the Layer-B contract trace "
+                        "(default 4; must divide 8)")
+    p.add_argument("--full-matrix", action="store_true",
+                   help="Layer B over shard counts 2/4/8 with the compiled-"
+                        "HLO d-independence pass at both scales (nightly)")
+    p.add_argument("--seed", type=int, default=0,
+                   help="seed for the traced aggregation key")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalog and exit")
+    args = p.parse_args(argv)
+
+    if args.list_rules:
+        for rule in RULES.values():
+            print(f"{rule.id} [layer {rule.layer}] {rule.title}")
+            print(f"    motivation: {rule.motivation}")
+        return 0
+
+    findings: list[Finding] = []
+    try:
+        if args.layer in ("a", "all"):
+            paths = args.paths or [_default_src_root()]
+            a = run_layer_a(paths)
+            print(f"[verify] layer A: {len(a)} finding(s) over "
+                  f"{', '.join(paths)}")
+            findings.extend(a)
+        if args.layer in ("b", "all"):
+            shards = [2, 4, 8] if args.full_matrix else [args.num_shards]
+            b = run_layer_b(aggregators_filter=args.aggregators,
+                            num_shards_list=shards, seed=args.seed,
+                            hlo_both_scales=args.full_matrix)
+            print(f"[verify] layer B: {len(b)} finding(s)")
+            findings.extend(b)
+    except SystemExit:
+        raise
+    except Exception:
+        traceback.print_exc()
+        print("[verify] INTERNAL ERROR — the checker itself failed "
+              "(this is not a finding)", file=sys.stderr)
+        return 2
+
+    for f in findings:
+        print(f.format())
+    n = len(findings)
+    print(f"[verify] {n} finding(s) total")
+    if findings and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

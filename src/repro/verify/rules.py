@@ -1,0 +1,182 @@
+"""Rule framework shared by both verifier layers.
+
+A *rule* is a named invariant with a stable ID (``RV1xx`` = Layer A source
+lint, ``RV2xx`` = Layer B lowered-IR analysis), a one-line title, and the
+PR / bug class that motivated it.  A *finding* is one violation with a
+precise source span (Layer A) or a synthesized anchor (Layer B, which
+reports against the registration site of the offending aggregator).
+
+Escape hatch (Layer A): a source line — or the line directly above it —
+carrying::
+
+    # repro: ignore[RV102] <justification>
+
+suppresses that rule's findings on that line.  The justification text is
+REQUIRED: an ignore with an empty justification (or naming an unknown rule
+ID) still suppresses, but raises the meta-finding ``RV100`` so the build
+fails anyway — there is no silent baseline-suppression path.
+
+Module *markers* opt a file into scope for the scoped rules::
+
+    # repro: bit-stable      — RV101 + RV105 (fixed-expression-tree modules)
+    # repro: robust-stat     — RV105 only (robust-statistic accumulation)
+    # repro: train-scan      — RV106 (training-scan carry discipline)
+
+See docs/STATIC_ANALYSIS.md for the catalog and the policy discussion.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    title: str
+    layer: str        # "A" (AST lint) | "B" (jaxpr/HLO analysis)
+    motivation: str   # the PR / bug class this rule encodes
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    end_line: int = 0     # 0 = single-line span
+    end_col: int = 0
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} " \
+               f"{self.message}"
+
+
+RULES: dict[str, Rule] = {}
+
+
+def _rule(id: str, title: str, layer: str, motivation: str) -> None:
+    RULES[id] = Rule(id=id, title=title, layer=layer, motivation=motivation)
+
+
+_rule("RV100", "suppression without justification / unknown rule ID", "A",
+      "escape-hatch policy: every ignore[...] must say why (zero silent "
+      "baseline suppressions — ISSUE 7)")
+_rule("RV101", "jnp.sum/jnp.mean over the shard/member axis in a "
+      "bit-stable module", "A",
+      "PR 6: XLA reassociates short-axis reductions differently per fusion "
+      "context (observed 1-ulp virtual-vs-shard_map drift); bit-stable "
+      "modules must use the unrolled add-chain helpers of "
+      "core/shard_aggregation.py")
+_rule("RV102", "literal PRNGKey(<int>) outside tests/entry points", "A",
+      "PR 5: random_select's PRNGKey(0) fallback silently downgraded the "
+      "rule to a fixed deterministic selection every round")
+_rule("RV103", "import-time os.environ / XLA_FLAGS mutation", "A",
+      "PR 4: dryrun's import-time XLA_FLAGS write poisoned any process "
+      "importing its helpers after their own jax backend init")
+_rule("RV104", "aggregators.register call missing metadata "
+      "(description / valid shard_contract)", "A",
+      "PR 6/7: the Layer-B collective analyzer verifies the *declared* "
+      "contract — an undeclared or invalid declaration voids the check")
+_rule("RV105", "robust-statistic reduction without f32 accumulation", "A",
+      "PR 6: bf16-accumulated means/dots feeding a median/trim/Weiszfeld "
+      "stage lose the paper's concentration bounds; accumulate in f32, "
+      "cast at the boundary")
+_rule("RV106", "training-scan carry element not backed by a TrainState "
+      "field", "A",
+      "PR 2: bit-exact resume checkpoints exactly TrainState; state that "
+      "rides the scan carry outside it silently breaks resume")
+_rule("RV201", "coordinate_wise aggregator lowers with cross-shard "
+      "collectives", "B",
+      "PR 6 shard-local contract: coordinate-wise rules must be "
+      "collective-free under a partitioned ShardSpec")
+_rule("RV202", "norm-based aggregator collective is d-dependent or "
+      "oversized", "B",
+      "PAPER.md §Thm 3: server cost O(md + kd log³N) rests on partial "
+      "reductions of (k,)/(m,)/(m,m) shape — never O(d) cross-shard "
+      "traffic")
+_rule("RV203", "shard-axis reduce op in a traced aggregator "
+      "(bit-unstable across fusion)", "B",
+      "PR 6: a jnp.sum over the shard-stack axis re-introduces the "
+      "reassociation freedom the unrolled chain_sum removed")
+_rule("RV204", "Pallas round-kernel VMEM budget inconsistent with the "
+      "declared device limit", "B",
+      "PR 3: the dispatcher's fits_vmem() and the kernel's _check_vmem() "
+      "guard share a formula only by convention — and the budget must fit "
+      "the declared per-core VMEM")
+
+
+# --------------------------------------------------------------------------
+# source context: markers + suppressions for one file
+
+IGNORE_RE = re.compile(
+    r"#\s*repro:\s*ignore\[([A-Za-z0-9_,\s]+)\]\s*(.*)$")
+BIT_STABLE_RE = re.compile(r"#\s*repro:\s*bit-stable\b")
+ROBUST_STAT_RE = re.compile(r"#\s*repro:\s*robust-stat\b")
+TRAIN_SCAN_RE = re.compile(r"#\s*repro:\s*train-scan\b")
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int
+    rule_ids: tuple[str, ...]
+    justification: str
+
+
+class SourceContext:
+    """One parsed source file plus its markers and suppressions."""
+
+    def __init__(self, path: str, src: str):
+        self.path = path
+        self.src = src
+        self.lines = src.splitlines()
+        self.tree = ast.parse(src, filename=path)
+        self.bit_stable = any(BIT_STABLE_RE.search(l) for l in self.lines)
+        self.robust_stat = self.bit_stable or any(
+            ROBUST_STAT_RE.search(l) for l in self.lines)
+        self.train_scan = any(TRAIN_SCAN_RE.search(l) for l in self.lines)
+        self.suppressions: list[Suppression] = []
+        for i, line in enumerate(self.lines, start=1):
+            m = IGNORE_RE.search(line)
+            if m is None:
+                continue
+            ids = tuple(s.strip() for s in m.group(1).split(",") if s.strip())
+            self.suppressions.append(
+                Suppression(line=i, rule_ids=ids,
+                            justification=m.group(2).strip()))
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        """True when ``rule`` is ignored at ``line`` (same line or the
+        comment line directly above)."""
+        for sup in self.suppressions:
+            if rule in sup.rule_ids and sup.line in (line, line - 1):
+                return True
+        return False
+
+
+def apply_suppressions(findings: list[Finding],
+                       ctx: SourceContext) -> list[Finding]:
+    """Drop suppressed findings; append RV100 meta-findings for every
+    suppression comment that lacks a justification or names an unknown
+    rule ID (the suppression still takes effect — RV100 keeps the build
+    red, so nothing is *silently* suppressed)."""
+    kept = [f for f in findings
+            if not ctx.suppressed(f.rule, f.line)]
+    for sup in ctx.suppressions:
+        unknown = [r for r in sup.rule_ids if r not in RULES]
+        if unknown:
+            kept.append(Finding(
+                rule="RV100", path=ctx.path, line=sup.line, col=0,
+                message=f"ignore[...] names unknown rule ID(s) "
+                        f"{', '.join(unknown)} — see docs/STATIC_ANALYSIS.md "
+                        "for the catalog"))
+        if not sup.justification:
+            kept.append(Finding(
+                rule="RV100", path=ctx.path, line=sup.line, col=0,
+                message="ignore[...] without a justification — state why "
+                        "the invariant does not apply here "
+                        "(docs/STATIC_ANALYSIS.md escape-hatch policy)"))
+    return kept

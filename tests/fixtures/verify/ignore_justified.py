@@ -1,0 +1,5 @@
+"""Fixture: a justified suppression (clean — finding dropped, no RV100)."""
+import jax
+
+# repro: ignore[RV102] fixture demonstrates the escape hatch; key unused
+FIXED = jax.random.PRNGKey(0)

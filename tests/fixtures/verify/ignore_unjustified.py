@@ -1,0 +1,5 @@
+"""Fixture: suppression without justification — RV102 is dropped but the
+RV100 meta-finding keeps the build red (no silent baseline)."""
+import jax
+
+FIXED = jax.random.PRNGKey(0)  # repro: ignore[RV102]

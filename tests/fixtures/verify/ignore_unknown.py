@@ -1,0 +1,5 @@
+"""Fixture: suppression naming an unknown rule ID (RV100; the RV102
+finding survives because ignore[RV999] does not cover it)."""
+import jax
+
+FIXED = jax.random.PRNGKey(0)  # repro: ignore[RV999] wrong rule id

@@ -1,0 +1,10 @@
+# repro: bit-stable
+"""Fixture: member-axis jnp.sum in a bit-stable module (one RV101).
+
+The operand is visibly f32 (astype) so RV105 stays quiet — the fixture
+isolates the reassociation rule from the accumulation rule."""
+import jax.numpy as jnp
+
+
+def bad_partial(parts):
+    return jnp.sum(parts.astype(jnp.float32), axis=0)

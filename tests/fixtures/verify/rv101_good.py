@@ -1,0 +1,15 @@
+# repro: bit-stable
+"""Fixture: bit-stable module with only fixed-order reductions (clean)."""
+import jax.numpy as jnp
+
+
+def chain_total(parts):
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = acc + p
+    return acc
+
+
+def per_member_norms(stacked):
+    # last-axis reduction — not the member axis; in scope but allowed
+    return jnp.sum(stacked.astype(jnp.float32) ** 2, axis=-1)

@@ -1,0 +1,8 @@
+"""Fixture: literal PRNGKey seeds outside entry points (RV102 x2)."""
+import jax
+
+FIXED_KEY = jax.random.PRNGKey(0)
+
+
+def helper():
+    return jax.random.key(42)

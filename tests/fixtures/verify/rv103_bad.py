@@ -1,0 +1,11 @@
+"""Fixture: import-time environment mutation (RV103 x3)."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+if os.environ.get("CI"):
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+class Config:
+    os.environ["REPRO_MODE"] = "fixture"

@@ -1,0 +1,10 @@
+"""Fixture: environment mutation confined to runtime calls (clean)."""
+import os
+
+
+def arm_host_devices(count):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={count}")
+
+
+READ_ONLY = os.environ.get("XLA_FLAGS", "")   # reads are fine

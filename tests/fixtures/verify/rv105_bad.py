@@ -1,0 +1,11 @@
+# repro: robust-stat
+"""Fixture: robust-stat reductions without f32 accumulation (RV105 x2)."""
+import jax.numpy as jnp
+
+
+def batch_means(stacked):
+    return jnp.mean(stacked, axis=0)        # no visible f32 up-cast
+
+
+def gram(a, b):
+    return jnp.dot(a, b.T)                  # no preferred_element_type

@@ -1,0 +1,11 @@
+# repro: robust-stat
+"""Fixture: f32-accumulated robust-stat reductions (clean)."""
+import jax.numpy as jnp
+
+
+def batch_means(stacked):
+    return jnp.mean(stacked.astype(jnp.float32), axis=0)
+
+
+def gram(a, b):
+    return jnp.dot(a, b.T, preferred_element_type=jnp.float32)

@@ -1,0 +1,9 @@
+# repro: train-scan
+"""Fixture: scan carry smuggling state past TrainState (RV106 x2)."""
+import jax
+
+
+def run(body, params, opt_state, staleness_buffer, xs):
+    carry = jax.lax.scan(
+        body, (params, opt_state, staleness_buffer, params[0]), xs)
+    return carry

@@ -1,0 +1,8 @@
+# repro: train-scan
+"""Fixture: scan carry backed entirely by TrainState fields (clean)."""
+import jax
+
+
+def run(body, params, opt_state, astate, xs):
+    carry = jax.lax.scan(body, (params, opt_state, astate), xs)
+    return carry

@@ -1,0 +1,76 @@
+"""force_host_device_count flag hygiene (tier-1, no jax backend init):
+idempotency, duplicate-flag normalization, and the already-initialized
+guard.  The environment is monkeypatched — the live backend is never
+touched (conftest pins JAX_PLATFORMS=cpu for the rest of the suite)."""
+
+import pytest
+
+from repro.launch import dryrun
+
+
+@pytest.fixture
+def uninitialized(monkeypatch):
+    monkeypatch.setattr(dryrun, "_jax_backend_initialized", lambda: False)
+
+
+def _flag_values(monkeypatch_env):
+    import re
+    return re.findall(r"--xla_force_host_platform_device_count=(\d+)",
+                      monkeypatch_env)
+
+
+def test_sets_flag_from_empty(monkeypatch, uninitialized):
+    import os
+    monkeypatch.delenv("XLA_FLAGS", raising=False)
+    dryrun.force_host_device_count(8)
+    assert os.environ["XLA_FLAGS"] == \
+        "--xla_force_host_platform_device_count=8"
+
+
+def test_repeat_invocation_is_idempotent(monkeypatch, uninitialized):
+    import os
+    monkeypatch.delenv("XLA_FLAGS", raising=False)
+    dryrun.force_host_device_count(8)
+    first = os.environ["XLA_FLAGS"]
+    dryrun.force_host_device_count(8)
+    assert os.environ["XLA_FLAGS"] == first
+    assert len(_flag_values(os.environ["XLA_FLAGS"])) == 1
+
+
+def test_normalizes_preexisting_duplicates(monkeypatch, uninitialized):
+    import os
+    monkeypatch.setenv(
+        "XLA_FLAGS",
+        "--xla_dump_to=/tmp/x "
+        "--xla_force_host_platform_device_count=8 "
+        "--xla_force_host_platform_device_count=4")
+    dryrun.force_host_device_count(2)
+    vals = _flag_values(os.environ["XLA_FLAGS"])
+    # exactly one occurrence, at the max of requested and pre-existing
+    assert vals == ["8"]
+    # unrelated flags survive
+    assert "--xla_dump_to=/tmp/x" in os.environ["XLA_FLAGS"]
+
+
+def test_takes_max_of_existing_and_requested(monkeypatch, uninitialized):
+    import os
+    monkeypatch.setenv("XLA_FLAGS",
+                       "--xla_force_host_platform_device_count=4")
+    dryrun.force_host_device_count(512)
+    assert _flag_values(os.environ["XLA_FLAGS"]) == ["512"]
+
+
+def test_initialized_backend_with_enough_devices_is_noop(monkeypatch):
+    import os
+    monkeypatch.setattr(dryrun, "_jax_backend_initialized", lambda: True)
+    monkeypatch.setattr(dryrun.jax, "device_count", lambda: 8)
+    monkeypatch.setenv("XLA_FLAGS", "")
+    dryrun.force_host_device_count(8)
+    assert os.environ["XLA_FLAGS"] == ""
+
+
+def test_initialized_backend_with_too_few_devices_raises(monkeypatch):
+    monkeypatch.setattr(dryrun, "_jax_backend_initialized", lambda: True)
+    monkeypatch.setattr(dryrun.jax, "device_count", lambda: 1)
+    with pytest.raises(RuntimeError, match="already initialized"):
+        dryrun.force_host_device_count(8)

@@ -1,0 +1,273 @@
+"""repro.verify — Layer A fixture corpus (exact rule IDs + spans), the
+escape-hatch policy, the CLI exit-code contract, the VMEM drift gate, and
+the Layer-B shard-contract analyzer (subprocess: forced 8-device host
+mesh) including rejection of a deliberately mis-declared aggregator."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "fixtures", "verify")
+
+
+def fx(name):
+    return os.path.join(FIXTURES, name)
+
+
+def lint(name):
+    from repro.verify import lint_file
+    return lint_file(fx(name))
+
+
+def ids_lines(findings):
+    return [(f.rule, f.line) for f in findings]
+
+
+# --------------------------------------------------------------------------
+# Layer A: one bad + one clean fixture per rule, exact IDs and lines
+
+def test_rv101_bad_exact_span():
+    fs = lint("rv101_bad.py")
+    assert ids_lines(fs) == [("RV101", 10)]
+    f = fs[0]
+    assert f.col == 11 and f.end_line == 10        # the call expression
+    assert "axis=0" in f.message and "chain" in f.message
+
+
+def test_rv101_good_clean():
+    assert lint("rv101_good.py") == []
+
+
+def test_rv102_bad_both_constructors():
+    fs = lint("rv102_bad.py")
+    assert ids_lines(fs) == [("RV102", 4), ("RV102", 8)]
+    assert "jax.random.PRNGKey(0)" in fs[0].message
+    assert "jax.random.key(42)" in fs[1].message
+
+
+def test_rv102_good_entry_points_exempt():
+    assert lint("rv102_good.py") == []
+
+
+def test_rv103_bad_import_time_mutations():
+    fs = lint("rv103_bad.py")
+    assert [f.rule for f in fs] == ["RV103"] * 3
+    assert [f.line for f in fs] == [4, 7, 11]      # top-level / if / class
+
+
+def test_rv103_good_runtime_only():
+    assert lint("rv103_good.py") == []
+
+
+def test_rv104_bad_missing_and_invalid_metadata():
+    fs = lint("rv104_bad.py")
+    assert [f.rule for f in fs] == ["RV104"] * 3
+    # two findings on the bare register (no description, no contract),
+    # one on the invalid contract literal
+    assert [f.line for f in fs] == [5, 5, 10]
+    assert "description" in fs[0].message
+    assert "shard_contract" in fs[1].message
+    assert "literal" in fs[2].message
+
+
+def test_rv104_good_clean():
+    assert lint("rv104_good.py") == []
+
+
+def test_rv105_bad_mean_and_dot():
+    fs = lint("rv105_bad.py")
+    assert ids_lines(fs) == [("RV105", 7), ("RV105", 11)]
+    assert "axis=0" in fs[0].message
+    assert "preferred_element_type" in fs[1].message
+
+
+def test_rv105_good_clean():
+    assert lint("rv105_good.py") == []
+
+
+def test_rv106_bad_carry_outside_train_state():
+    fs = lint("rv106_bad.py")
+    assert [f.rule for f in fs] == ["RV106"] * 2
+    assert "staleness_buffer" in fs[0].message
+    assert "not a plain name" in fs[1].message
+
+
+def test_rv106_good_clean():
+    assert lint("rv106_good.py") == []
+
+
+# --------------------------------------------------------------------------
+# escape hatch: suppression drops the finding, but only WITH justification
+
+def test_ignore_justified_is_silent():
+    assert lint("ignore_justified.py") == []
+
+
+def test_ignore_without_justification_raises_rv100():
+    fs = lint("ignore_unjustified.py")
+    assert ids_lines(fs) == [("RV100", 5)]
+    assert "justification" in fs[0].message
+
+
+def test_ignore_unknown_rule_id_raises_rv100_and_keeps_finding():
+    fs = lint("ignore_unknown.py")
+    assert sorted(f.rule for f in fs) == ["RV100", "RV102"]
+
+
+def test_every_rule_documented_in_catalog():
+    from repro.verify.rules import RULES
+    for rid in ("RV100", "RV101", "RV102", "RV103", "RV104", "RV105",
+                "RV106", "RV201", "RV202", "RV203", "RV204"):
+        assert rid in RULES
+        assert RULES[rid].motivation
+
+
+def test_train_state_fields_parse():
+    from repro.verify.ast_rules import train_state_fields
+    fields = train_state_fields()
+    assert "params" in fields and "opt_state" in fields
+    assert "attack_state" in fields and "base_key" in fields
+
+
+# --------------------------------------------------------------------------
+# CLI exit codes
+
+def _run_cli(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.verify", *args],
+        capture_output=True, text=True, timeout=300,
+        env=dict(os.environ, PYTHONPATH=os.path.join(REPO, "src")))
+
+
+def test_cli_strict_fails_on_bad_fixture():
+    res = _run_cli("--layer", "a", "--strict", "--paths",
+                   fx("rv102_bad.py"))
+    assert res.returncode == 1, (res.stdout, res.stderr)
+    assert "RV102" in res.stdout
+
+
+def test_cli_nonstrict_reports_but_passes():
+    res = _run_cli("--layer", "a", "--paths", fx("rv102_bad.py"))
+    assert res.returncode == 0, (res.stdout, res.stderr)
+    assert "RV102" in res.stdout
+
+
+def test_cli_strict_clean_on_good_fixture():
+    res = _run_cli("--layer", "a", "--strict", "--paths",
+                   fx("rv102_good.py"))
+    assert res.returncode == 0, (res.stdout, res.stderr)
+
+
+def test_cli_strict_clean_on_src_tree():
+    """Satellite 6's acceptance: zero Layer-A findings on the real tree."""
+    res = _run_cli("--layer", "a", "--strict")
+    assert res.returncode == 0, (res.stdout, res.stderr)
+
+
+def test_ci_wires_verifier_into_both_lanes():
+    yaml = pytest.importorskip("yaml")
+    with open(os.path.join(REPO, ".github", "workflows", "ci.yml")) as f:
+        wf = yaml.safe_load(f)
+    import json
+    tier1 = json.dumps(wf["jobs"]["tier1"])
+    slow = json.dumps(wf["jobs"]["slow"])
+    assert "repro.verify --strict" in tier1
+    assert "repro.verify --strict --full-matrix" in slow
+
+
+def test_cli_list_rules():
+    res = _run_cli("--list-rules")
+    assert res.returncode == 0
+    for rid in ("RV101", "RV204"):
+        assert rid in res.stdout
+
+
+# --------------------------------------------------------------------------
+# Layer B / RV204: VMEM budget drift gate (in-process — no mesh needed)
+
+def test_vmem_audit_clean():
+    from repro.verify.vmem import check_vmem_budget
+    assert check_vmem_budget() == []
+
+
+def test_vmem_audit_catches_budget_over_device(monkeypatch):
+    from repro.kernels.geomed import round as round_mod
+    from repro.verify.vmem import check_vmem_budget
+    monkeypatch.setattr(round_mod, "DEVICE_VMEM_BYTES",
+                        round_mod.VMEM_BUDGET_BYTES // 2)
+    fs = check_vmem_budget()
+    assert any(f.rule == "RV204" and "DEVICE_VMEM_BYTES" in f.message
+               for f in fs)
+
+
+def test_vmem_audit_catches_formula_drift(monkeypatch):
+    from repro.kernels.geomed import round as round_mod
+    from repro.verify.vmem import check_vmem_budget
+    # dispatcher suddenly over-promises: everything "fits"
+    monkeypatch.setattr(round_mod, "fits_vmem",
+                        lambda m, k, d, tile_d=round_mod.TILE_D: True)
+    fs = check_vmem_budget()
+    assert any(f.rule == "RV204" and "drifted" in f.message for f in fs)
+
+
+# --------------------------------------------------------------------------
+# Layer B: contract analyzer on the 8-device debug mesh (subprocess — the
+# virtual-device flag must be set before jax initializes).  gmom
+# (norm_based) vs coord_median (coordinate_wise) covers both contract
+# shapes; the mis-declared dummy proves the analyzer actually rejects.
+
+LAYER_B_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from repro.core import aggregators
+    from repro.verify import contracts
+    from repro.verify.collectives import jaxpr_collectives
+
+    # coordinate_wise: zero collectives in jaxpr AND compiled HLO
+    fs = contracts.check_aggregator("coord_median", num_shards=4)
+    assert fs == [], [f.format() for f in fs]
+
+    # norm_based: collectives present but d-independent
+    fn1, args1 = contracts._sharded_fn("gmom", 4, 1, seed=0)
+    uses = jaxpr_collectives(jax.make_jaxpr(fn1)(*args1))
+    assert uses, "gmom should need cross-shard partial reductions"
+    fs = contracts.check_aggregator("gmom", num_shards=4)
+    assert fs == [], [f.format() for f in fs]
+
+    # deliberately mis-declared: claims coordinate_wise, psums anyway
+    @aggregators.register("_test_misdeclared",
+                          "claims coordinate_wise but psums over the mesh",
+                          shard_contract="coordinate_wise")
+    def _misdeclared(stacked, **_kw):
+        def leaf(g):
+            s = jax.lax.psum(jnp.sum(g.astype(jnp.float32), axis=0),
+                             "model")
+            return (s / g.shape[0]).astype(g.dtype)
+        return jax.tree.map(leaf, stacked)
+
+    try:
+        fs = contracts.check_aggregator("_test_misdeclared", num_shards=4)
+        assert any(f.rule == "RV201" for f in fs), \\
+            [f.format() for f in fs]
+        jaxpr_hit = any("jaxpr" in f.message for f in fs
+                        if f.rule == "RV201")
+        hlo_hit = any("HLO" in f.message for f in fs if f.rule == "RV201")
+        assert jaxpr_hit and hlo_hit, [f.format() for f in fs]
+    finally:
+        aggregators._REGISTRY.pop("_test_misdeclared", None)
+    print("OK")
+""")
+
+
+def test_layer_b_contracts_and_misdeclared_rejection():
+    res = subprocess.run(
+        [sys.executable, "-c", LAYER_B_SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env=dict(os.environ, PYTHONPATH=os.path.join(REPO, "src")))
+    assert res.returncode == 0, (res.stdout[-800:], res.stderr[-4000:])
+    assert "OK" in res.stdout
