@@ -97,7 +97,35 @@ def collect_problems() -> list[str]:
                         "speedup <= 1")
 
     problems += _pod_sweep_problems(paper_map)
+    problems += _codec_problems(paper_map)
     problems += _verify_rules_problems(paper_map)
+    return problems
+
+
+def _codec_problems(paper_map: str) -> list[str]:
+    """The wire-codec contract: every registered compression codec must be
+    documented where the §1.4 cost claims live — the PAPER_MAP comm-cost
+    rows AND the docs/BENCHMARKS.md wire-traffic section — with a
+    non-empty registry description (same discipline as the aggregator /
+    attack registries: the registry IS the documentation surface)."""
+    from repro.core import compression
+
+    problems: list[str] = []
+    benchmarks_md = _read(os.path.join("docs", "BENCHMARKS.md"))
+    for name, description in compression.describe():
+        if f"`{name}`" not in paper_map:
+            problems.append(
+                f"compression codec {name!r} is registered but missing "
+                "from docs/PAPER_MAP.md — add it to the §1.4 "
+                "communication-cost rows")
+        if f"`{name}`" not in benchmarks_md:
+            problems.append(
+                f"compression codec {name!r} is registered but missing "
+                "from the docs/BENCHMARKS.md wire-traffic section")
+        if not description.strip():
+            problems.append(
+                f"compression codec {name!r} has an empty registry "
+                "description")
     return problems
 
 

@@ -30,6 +30,16 @@ small-norm attacks; the **sound combined selection rules** close that gap
                            dropping huge AND adversarially-small outliers)
                            then GMoM on the survivors [Su & Xu '18]
 
+The **communication-compressed rules** consume the wire formats of
+``repro.core.compression`` natively (see their section comment):
+
+* ``sign_sgd_majority``  — coordinate-wise majority vote over 1-bit sign
+                           gradients [Jin et al. '19] — votes on the packed
+                           uint8 wire directly
+* ``int8_gmom``          — dequantize-then-GMoM on the 8-bit stochastic
+                           wire (per-worker scales), reusing the full gmom
+                           pipeline incl. ``round_backend`` dispatch
+
 Every rule honors the **shard-local contract** (see
 ``repro.core.shard_aggregation``): coordinate-wise rules touch each
 parameter shard independently (no cross-shard collectives at all), and the
@@ -132,6 +142,14 @@ class Aggregator:
     deliberately the *strictest* class (zero collectives), so an
     undeclared contract can only ever fail the analyzer loudly, never
     silently grant a rule more communication than it admits to.
+
+    ``native_codec`` names the wire format (``repro.core.compression``)
+    the rule consumes directly: when ``RobustConfig.compression`` matches
+    it, ``aggregate_reported`` skips the server-side decode and hands the
+    rule the encoded payload plus a ``like=`` shape/dtype template
+    (``sign_sgd_majority`` votes on packed sign bits; ``int8_gmom``
+    dequantizes in-rule).  ``None`` means the rule only ever sees float
+    gradients — any configured codec is decoded before dispatch.
     """
     name: str
     fn: AggregatorFn
@@ -141,6 +159,7 @@ class Aggregator:
     needs_grouping: bool = False
     needs_shard_spec: bool = False
     shard_contract: str = "coordinate_wise"
+    native_codec: str | None = None
 
     def __call__(self, stacked_grads, **kw):
         return self.fn(stacked_grads, **kw)
@@ -149,7 +168,8 @@ class Aggregator:
 def register(name: str, description: str = "", *,
              needs_num_byzantine: bool = False, needs_key: bool = False,
              needs_grouping: bool = False, needs_shard_spec: bool = False,
-             shard_contract: str = "coordinate_wise"):
+             shard_contract: str = "coordinate_wise",
+             native_codec: str | None = None):
     if shard_contract not in SHARD_CONTRACTS:
         raise ValueError(
             f"aggregator {name!r} declares unknown shard_contract "
@@ -159,7 +179,7 @@ def register(name: str, description: str = "", *,
             name=name, fn=fn, description=description,
             needs_num_byzantine=needs_num_byzantine, needs_key=needs_key,
             needs_grouping=needs_grouping, needs_shard_spec=needs_shard_spec,
-            shard_contract=shard_contract)
+            shard_contract=shard_contract, native_codec=native_codec)
         return fn
     return deco
 
@@ -838,3 +858,75 @@ def gmom_per_leaf_aggregator(stacked_grads, *, num_batches: int | None = None,
         return med.astype(z.dtype).reshape(z.shape[1:])
 
     return jax.tree.map(leaf, means)
+
+
+# ---------------------------------------------------------------------------
+# communication-compressed rules (repro.core.compression)
+#
+# The paper's wire cost is O(md log N) bits per round (§1.4).  These two
+# rules consume the compressed wire formats natively: when
+# RobustConfig.compression matches the registered ``native_codec``,
+# aggregate_reported hands them the encoded payload (plus a ``like=``
+# shape/dtype template) instead of decoded floats.  With
+# compression="none" they accept raw stacked gradients and behave
+# identically — sign_sgd_majority votes on the raw signs, int8_gmom runs
+# the plain gmom pipeline — so every existing harness (defense matrix,
+# shard bitwise oracle, Layer B) covers them with no special casing.
+
+@register("sign_sgd_majority",
+          "coordinate-wise majority vote over 1-bit sign gradients "
+          "[Jin et al. '19] — consumes the packed `sign` wire natively "
+          "(votes on uint8 words, never reconstructs float gradients); "
+          "shard-local with zero cross-shard collectives",
+          shard_contract="coordinate_wise", native_codec="sign")
+def sign_sgd_majority_aggregator(stacked_grads, *, like=None, **_kw):
+    """signSGD with majority vote (Jin et al. '19, arXiv 1902.10336):
+    per coordinate, output −1 if a strict majority of the m reported sign
+    bits are negative, else +1 (ties → +1).  Tolerant of q < m/2 blind
+    sign-flippers; the vote-native ``sign_flip_targeted`` adversary breaks
+    it exactly where the honest margin is ≤ 2q (the defense matrix pins
+    that break point).
+
+    The vote counting itself (exact integer sums over the worker axis)
+    lives in ``repro.core.compression`` next to the packing code; both the
+    raw and the packed entry points produce identical counts bit for bit.
+    """
+    from repro.core import compression
+    if like is not None:
+        return compression.majority_vote_packed(stacked_grads, like)
+    return compression.majority_vote_signs(stacked_grads)
+
+
+@register("int8_gmom",
+          "GMoM on 8-bit stochastically-quantized reports: dequantizes the "
+          "`int8_stochastic` wire (per-worker scales) then runs the full "
+          "gmom pipeline incl. round_backend dispatch — 4× wire cut with "
+          "the paper's Algorithm 2 guarantees on the dequantized reports",
+          needs_num_byzantine=True, needs_grouping=True,
+          needs_shard_spec=True, shard_contract="norm_based",
+          native_codec="int8_stochastic")
+def int8_gmom_aggregator(stacked_grads, *, like=None,
+                         num_batches: int | None = None,
+                         num_byzantine: int = 0, epsilon: float = 0.1,
+                         grouping_scheme: str = "contiguous",
+                         trim_multiplier: float | None = 3.0,
+                         max_iters: int = 64, tol: float = 1e-8,
+                         round_backend: str | None = "auto",
+                         shard_spec=None, **_kw):
+    """Dequantize-then-GMoM: the int8 payload (q values + per-worker
+    scales) is expanded back to ``like``'s dtype in-rule, then the paper's
+    Algorithm 2 pipeline runs unchanged — including the ``round_backend``
+    dispatch to the fused Pallas round kernel and the shard-local blocked
+    reductions.  With ``compression="none"`` (``like=None``) the reports
+    arrive unquantized and this IS gmom."""
+    if like is not None:
+        from repro.core import compression
+        stacked_grads = compression.get_codec("int8_stochastic").decode(
+            stacked_grads, like)
+    return gmom_aggregator(stacked_grads, num_batches=num_batches,
+                           num_byzantine=num_byzantine, epsilon=epsilon,
+                           grouping_scheme=grouping_scheme,
+                           trim_multiplier=trim_multiplier,
+                           max_iters=max_iters, tol=tol,
+                           round_backend=round_backend,
+                           shard_spec=shard_spec)

@@ -269,6 +269,56 @@ def norm_stealth_attack(stacked_grads, byz_mask, key, *,
     return _where_byz(byz_mask, malicious, stacked_grads)
 
 
+@register("sign_flip_targeted",
+          "omniscient, native to majority-vote aggregation: casts all q "
+          "byzantine votes against the honest sign exactly on the "
+          "coordinates where the margin is thin enough to flip the vote, "
+          "and reports the honest mean elsewhere — honest-sized magnitude, "
+          "maximal vote damage")
+def sign_flip_targeted_attack(stacked_grads, byz_mask, key, **_kw):
+    """The adversary native to ``sign_sgd_majority``: per coordinate it
+    counts the honest sign votes, identifies the coordinates where casting
+    all q byzantine votes against the honest majority flips the outcome
+    (margin ≤ 2q in vote counts), and reports a gradient whose sign opposes
+    the honest majority exactly there — with honest-mean-|g| magnitude, so
+    unlike ``sign_flip``'s −10×g reports it hides inside the honest norm
+    envelope.  On thick-margin coordinates it reports the honest mean
+    (indistinguishable from an honest worker).  Against averaging rules the
+    damage is negligible; against the vote it is optimal per coordinate.
+    """
+    del key
+    m = jax.tree.leaves(stacked_grads)[0].shape[0]
+    honest_w = jnp.logical_not(byz_mask).astype(jnp.float32)     # (m,)
+    n_h = jnp.maximum(jnp.sum(honest_w), 1.0)
+    q = jnp.sum(byz_mask.astype(jnp.float32))
+
+    def mal(g):
+        gf = g.astype(jnp.float32)
+        w = _mask_like(honest_w, gf)
+        neg = jnp.signbit(gf).astype(jnp.float32)
+        # votes the server would see if everyone reported honestly, and the
+        # honest workers' share of the negative votes
+        n_neg_all = jnp.sum(neg, axis=0, keepdims=True)
+        n_neg_h = jnp.sum(neg * w, axis=0, keepdims=True)
+        maj_neg = 2.0 * n_neg_all > m                # honest-vote outcome
+        # flippable: with all q byzantine votes cast against the honest
+        # majority the outcome changes (ties resolve to +1, matching the
+        # server's vote rule)
+        flip_pos_maj = jnp.logical_and(
+            jnp.logical_not(maj_neg), 2.0 * (n_neg_h + q) > m)
+        flip_neg_maj = jnp.logical_and(maj_neg, 2.0 * n_neg_h <= m)
+        flippable = jnp.logical_or(flip_pos_maj, flip_neg_maj)
+        # honest-sized magnitude, sign against the majority where it flips
+        mu = jnp.sum(gf * w, axis=0, keepdims=True) / n_h
+        mag = jnp.sum(jnp.abs(gf) * w, axis=0, keepdims=True) / n_h
+        against = jnp.where(maj_neg, mag, -mag)
+        point = jnp.where(flippable, against, mu)
+        return jnp.broadcast_to(point, g.shape).astype(g.dtype)
+
+    return _where_byz(byz_mask, jax.tree.map(mal, stacked_grads),
+                      stacked_grads)
+
+
 # ---------------------------------------------------------------------------
 # attack schedules: multi-round adversaries as pure functions of the round
 

@@ -1,0 +1,318 @@
+"""Gradient compression codecs for the worker → server report wire.
+
+The paper's per-round communication cost is O(m·d·log N) bits: every worker
+ships its full-precision gradient to the server (§1.4).  Jin et al.
+(arXiv 1902.10336) show 1-bit sign gradients with a coordinate-wise
+majority vote retain Byzantine tolerance, and stochastic int8 quantization
+keeps the GMoM pipeline sound at 4× fewer bits.  This module is the codec
+layer under ``robust_train.aggregate_reported``: workers *encode* their
+stacked reports, the wire carries the payload, and the server either
+*decodes* back to floats before a generic robust rule or — for an
+aggregator whose ``native_codec`` matches (``sign_sgd_majority``) —
+consumes the payload directly, never materializing float gradients at all.
+
+Registered codecs:
+
+* ``none``            — identity passthrough (the default wire).
+* ``sign``            — 1 bit/coordinate: the IEEE sign bit of every
+                        coordinate (``jnp.signbit``: −0.0 and negative
+                        subnormals count as negative, +0.0 as positive),
+                        packed LSB-first into uint8 words along each leaf's
+                        LAST dim — the dim the shard-local contract
+                        partitions, so per-shard slices pack locally with
+                        no cross-shard data motion.  Deterministic and
+                        dtype-independent: f32 and bf16 inputs with the
+                        same sign pattern pack to identical bytes.
+* ``int8_stochastic`` — 8 bits/coordinate + one f32 scale per (worker,
+                        leaf): per-worker amax/127 scaling and PRNG-keyed
+                        stochastic rounding, unbiased
+                        (E[decode(encode(g))] = g) with worst-case
+                        per-coordinate error strictly below one scale step.
+                        Scales are per-WORKER precisely to close the
+                        quantization-range attack: a shared scale would let
+                        one Byzantine report inflate every honest worker's
+                        quantization error.
+
+This module deliberately carries no ``repro:`` robust-stat marker: every
+reduction here is integer vote counting or an exact floating max — there is
+no f32 statistic accumulation to protect (repro.verify RV105 guards the
+robust statistics in ``aggregators.py``, which consume these helpers).
+
+Shard-locality: packing, unpacking, and vote counting act on the last dim
+only, so under a partitioned :class:`~repro.core.shard_aggregation.ShardSpec`
+every codec runs on local slices.  The only cross-shard combine is
+``int8_stochastic``'s per-worker (m,)-shaped amax — and max is exactly
+associative, so the ``shard_map`` all_gather + ordered-maximum chain is
+bitwise identical to the gathered ``jnp.max`` the ``virtual`` oracle and
+the unsharded path compute.  Stochastic-rounding noise is keyed per
+(leaf, shard) via ``fold_in``, so ``shard_map`` and ``virtual`` draw the
+same bits slice for slice.  Codecs are stateless — no TrainState field —
+so the PR 2 bit-exact resume contract holds with no checkpoint changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+EncodeFn = Callable[..., object]   # stacked pytree -> payload pytree
+DecodeFn = Callable[..., object]   # (payload, like) -> stacked pytree
+
+_REGISTRY: dict[str, "Codec"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """Registry entry for one wire format.
+
+    * ``encode(stacked, key=None, shard_spec=None)`` maps the stacked
+      per-worker gradient pytree to the wire payload.  ``key`` is required
+      when ``needs_key`` (randomized codecs); ``shard_spec`` describes how
+      leaf last dims are partitioned (see module docstring).
+    * ``decode(payload, like)`` reconstructs a stacked pytree with the
+      shapes/dtypes of ``like`` (``like`` may be a pytree of
+      ``ShapeDtypeStruct``s — only ``.shape``/``.ndim``/``.dtype`` are
+      read, so dry-run lowerings need no real gradients).
+    * ``bits_per_coordinate`` is the nominal wire width (docs/benchmarks;
+      the measured bytes in BENCH_pod_sweeps.json are the ground truth).
+    """
+    name: str
+    description: str
+    encode: EncodeFn
+    decode: DecodeFn
+    needs_key: bool = False
+    bits_per_coordinate: float = 32.0
+
+
+def register(name: str, description: str, *, encode: EncodeFn,
+             decode: DecodeFn, needs_key: bool = False,
+             bits_per_coordinate: float = 32.0) -> Codec:
+    codec = Codec(name=name, description=description, encode=encode,
+                  decode=decode, needs_key=needs_key,
+                  bits_per_coordinate=bits_per_coordinate)
+    _REGISTRY[name] = codec
+    return codec
+
+
+def get_codec(name: str) -> Codec:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown codec {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def describe() -> list[tuple[str, str]]:
+    """(name, description) rows for every registered codec, sorted."""
+    return [(n, _REGISTRY[n].description) for n in available()]
+
+
+# ---------------------------------------------------------------------------
+# sign: 1-bit packing of the last dim
+
+def packed_words(d: int) -> int:
+    """uint8 words needed for d sign bits (last-dim padding to 8)."""
+    return -(-d // 8)
+
+
+def _with_param_dim(leaf):
+    """A stacked leaf with no param dims (shape (m,)) packs as (m, 1)."""
+    return leaf[:, None] if leaf.ndim == 1 else leaf
+
+
+def pack_signs(x):
+    """Sign bits of ``x`` packed LSB-first into uint8 along the last dim.
+
+    Bit 1 = negative per ``jnp.signbit`` (so −0.0 and negative subnormals
+    are negative, +0.0 is positive).  The last dim is zero-padded to a
+    multiple of 8; padding bits are 0.  Packing only the LAST dim keeps
+    per-shard slices independently packable: each local slice pads its own
+    tail, and per-coordinate sign recovery never crosses a word owned by
+    another shard.
+    """
+    d = x.shape[-1]
+    words = packed_words(d)
+    bits = jnp.signbit(x).astype(jnp.uint8)
+    pad = words * 8 - d
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(x.shape[:-1] + (pad,), jnp.uint8)], axis=-1)
+    bits = bits.reshape(x.shape[:-1] + (words, 8))
+    # unrolled OR chain: exact integer combine, no sum reduction at all
+    word = bits[..., 0]
+    for b in range(1, 8):
+        word = word | (bits[..., b] << b)
+    return word
+
+
+def unpack_signs(packed, d: int):
+    """Inverse of :func:`pack_signs`: (..., words) uint8 → (..., d) {0,1}."""
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (packed[..., None] >> shifts) & jnp.uint8(1)    # (..., words, 8)
+    bits = bits.reshape(packed.shape[:-1] + (packed.shape[-1] * 8,))
+    return bits[..., :d]
+
+
+def _sign_encode(stacked, *, key=None, shard_spec=None):
+    del key, shard_spec   # deterministic; packing is shard-local by design
+    return {"packed": jax.tree.map(
+        lambda g: pack_signs(_with_param_dim(g)), stacked)}
+
+
+def _sign_decode(payload, like):
+    def leaf(p, g):
+        d = g.shape[-1] if g.ndim > 1 else 1
+        bits = unpack_signs(p, d)
+        signs = (1 - 2 * bits.astype(jnp.int8)).astype(g.dtype)
+        return signs[..., 0] if g.ndim == 1 else signs
+    return jax.tree.map(leaf, payload["packed"], like)
+
+
+# ---------------------------------------------------------------------------
+# coordinate-wise majority vote (the sign_sgd_majority server rule)
+#
+# Both entry points produce the identical per-coordinate negative-vote count
+# (an exact int32 sum of {0,1}), so the raw path (compression="none") and
+# the packed wire path (compression="sign") agree bit for bit.  Ties
+# (2·n_neg == m) resolve to +1 in both.
+
+def majority_vote_signs(stacked):
+    """Vote directly on raw stacked reports: leaf (m, ...) → ±1 of (...)."""
+    def leaf(g):
+        m = g.shape[0]
+        n_neg = jnp.sum(jnp.signbit(g).astype(jnp.int32), axis=0)
+        return jnp.where(2 * n_neg > m, -1, 1).astype(g.dtype)
+    return jax.tree.map(leaf, stacked)
+
+
+def majority_vote_packed(payload, like):
+    """Vote on the packed sign payload without reconstructing gradients."""
+    def leaf(p, g):
+        m = g.shape[0]
+        d = g.shape[-1] if g.ndim > 1 else 1
+        bits = unpack_signs(p, d)                           # (m, ..., d)
+        n_neg = jnp.sum(bits.astype(jnp.int32), axis=0)     # (..., d)
+        vote = jnp.where(2 * n_neg > m, -1, 1).astype(g.dtype)
+        return vote[..., 0] if g.ndim == 1 else vote
+    return jax.tree.map(leaf, payload["packed"], like)
+
+
+# ---------------------------------------------------------------------------
+# int8_stochastic: per-(worker, leaf) scale + PRNG-keyed stochastic rounding
+
+def _chain_max(parts):
+    """Ordered maximum over the leading axis — max is exactly associative,
+    so this equals ``jnp.max(axis=0)`` bit for bit; the explicit chain keeps
+    the expression tree identical between shard_map and virtual mode."""
+    acc = parts[0]
+    for i in range(1, parts.shape[0]):
+        acc = jnp.maximum(acc, parts[i])
+    return acc
+
+
+def _int8_encode(stacked, *, key=None, shard_spec=None):
+    if key is None:
+        raise ValueError(
+            "int8_stochastic requires a PRNG key for stochastic rounding "
+            "(aggregate_reported threads a per-round key automatically)")
+    from repro.core.shard_aggregation import shard_slice
+    leaves, treedef = jax.tree.flatten(stacked)
+    blocked = shard_spec is not None and shard_spec.blocked
+    q_leaves, s_leaves = [], []
+    for i, g in enumerate(leaves):
+        kleaf = jax.random.fold_in(key, i)
+        gf = g.astype(jnp.float32)
+        # per the shard-local partitioning convention: leaves with param
+        # dims are split on their last dim; (m,) leaves are replicated.
+        sharded = blocked and g.ndim > 1
+        axes = tuple(range(1, g.ndim))
+        if g.ndim == 1:
+            amax = jnp.abs(gf)                              # (m,)
+        elif sharded and shard_spec.mode == "shard_map":
+            local = jnp.max(jnp.abs(gf), axis=axes)         # (m,) local amax
+            parts = jax.lax.all_gather(local, shard_spec.axis, axis=0)
+            amax = _chain_max(parts)
+        elif sharded and shard_spec.mode == "virtual":
+            s = shard_spec.num_shards
+            parts = jnp.stack([
+                jnp.max(jnp.abs(shard_slice(gf, j, s)), axis=axes)
+                for j in range(s)])
+            amax = _chain_max(parts)
+        else:
+            amax = jnp.max(jnp.abs(gf), axis=axes)          # (m,)
+        # explicit constant MULTIPLY, not ``amax / 127.0``: XLA
+        # strength-reduces constant-divisor divisions into
+        # reciprocal multiplies in some fusion contexts but not others
+        # (observed: 1-ulp scale drift between the eager and the
+        # shard_map lowering of this very line), while a constant
+        # multiply is one exactly-rounded op in every context.
+        scale = jnp.where(amax > 0.0, amax * (1.0 / 127.0), 1.0)   # (m,)
+        sb = scale.reshape((-1,) + (1,) * (g.ndim - 1))
+        y = gf / sb                                         # |y| <= 127
+        if sharded and shard_spec.mode == "shard_map":
+            u = jax.random.uniform(
+                jax.random.fold_in(kleaf,
+                                   jax.lax.axis_index(shard_spec.axis)),
+                g.shape)
+        elif sharded and shard_spec.mode == "virtual":
+            s = shard_spec.num_shards
+            u = jnp.concatenate([
+                jax.random.uniform(
+                    jax.random.fold_in(kleaf, j),
+                    shard_slice(gf, j, s).shape)
+                for j in range(s)], axis=-1)
+        else:
+            u = jax.random.uniform(jax.random.fold_in(kleaf, 0), g.shape)
+        qv = jnp.clip(jnp.floor(y + u), -127.0, 127.0).astype(jnp.int8)
+        q_leaves.append(qv)
+        s_leaves.append(scale)
+    return {"q": jax.tree.unflatten(treedef, q_leaves),
+            "scale": jax.tree.unflatten(treedef, s_leaves)}
+
+
+def _int8_decode(payload, like):
+    def leaf(qv, s, g):
+        sb = s.reshape((-1,) + (1,) * (qv.ndim - 1))
+        return (qv.astype(jnp.float32) * sb).astype(g.dtype)
+    return jax.tree.map(leaf, payload["q"], payload["scale"], like)
+
+
+# ---------------------------------------------------------------------------
+# none: identity passthrough
+
+def _none_encode(stacked, *, key=None, shard_spec=None):
+    del key, shard_spec
+    return stacked
+
+
+def _none_decode(payload, like):
+    del like
+    return payload
+
+
+register("none",
+         "identity passthrough — full-precision reports, the paper's "
+         "O(md log N)-bit wire (§1.4)",
+         encode=_none_encode, decode=_none_decode,
+         bits_per_coordinate=32.0)
+
+register("sign",
+         "1-bit sign compression [Jin et al. '19]: the IEEE sign bit of "
+         "every coordinate, packed LSB-first into uint8 words along each "
+         "leaf's last (shard-partitioned) dim — deterministic and "
+         "dtype-independent",
+         encode=_sign_encode, decode=_sign_decode,
+         bits_per_coordinate=1.0)
+
+register("int8_stochastic",
+         "8-bit stochastic quantization: per-(worker, leaf) amax/127 scale "
+         "+ PRNG-keyed stochastic rounding — unbiased, worst-case "
+         "per-coordinate error below one scale step; per-worker scales "
+         "close the quantization-range attack",
+         encode=_int8_encode, decode=_int8_decode, needs_key=True,
+         bits_per_coordinate=8.0)

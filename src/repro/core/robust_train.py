@@ -55,6 +55,13 @@ class RobustConfig:
     # jnp reference elsewhere), "fused", "fused_interpret", or "reference".
     # The golden traces are recorded on the reference path.
     round_backend: str = "auto"
+    # wire format of the worker -> server reports (repro.core.compression):
+    # "none" (full precision), "sign" (1 bit/coordinate), or
+    # "int8_stochastic".  The server decodes before aggregation unless the
+    # aggregator's registered native_codec matches, in which case the rule
+    # consumes the payload directly (sign_sgd_majority votes on packed
+    # sign bits without ever reconstructing float gradients).
+    compression: str = "none"
 
     def resolved_num_batches(self) -> int:
         if self.num_batches is not None:
@@ -98,9 +105,33 @@ def aggregate_reported(reported_grads, cfg: RobustConfig, *, key,
     it reaches every rule that registered ``needs_shard_spec`` (the
     norm-based rules whose reductions cross shards — coordinate-wise rules
     are shard-local without it).
+
+    ``cfg.compression`` selects the wire format (repro.core.compression):
+    reports are encoded worker-side, and the server decodes the payload
+    back to a float pytree before aggregation — unless the aggregator's
+    registered ``native_codec`` matches the configured codec, in which
+    case the payload is passed straight through (with the original tree as
+    the ``like=`` shape/dtype template) and the rule consumes the wire
+    format directly.
     """
     agg = aggregators.get_aggregator(cfg.aggregator)
     kwargs: dict[str, Any] = {}
+    if cfg.compression != "none":
+        from repro.core import compression
+        codec = compression.get_codec(cfg.compression)
+        ckey = None
+        if codec.needs_key:
+            if key is None:
+                raise ValueError(
+                    f"compression {cfg.compression!r} needs a PRNG key")
+            ckey = jax.random.fold_in(key, 29)
+        payload = codec.encode(reported_grads, key=ckey,
+                               shard_spec=shard_spec)
+        if agg.native_codec == cfg.compression:
+            kwargs.update(like=reported_grads)
+            reported_grads = payload
+        else:
+            reported_grads = codec.decode(payload, reported_grads)
     if agg.needs_num_byzantine:
         kwargs.update(num_byzantine=cfg.num_byzantine)
     if agg.needs_key:

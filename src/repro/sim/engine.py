@@ -58,7 +58,8 @@ def _build_run(sc: Scenario, *, round_backend: str = "auto"):
                       num_batches=sc.num_batches,
                       aggregator=sc.aggregator, attack=sc.attack,
                       attack_kwargs=sc.attack_kwargs,
-                      round_backend=round_backend)
+                      round_backend=round_backend,
+                      compression=sc.compression)
     opt = optim.sgd(sc.step_size)
     theta_star = ds.theta_star
 
@@ -77,7 +78,7 @@ def _build_run(sc: Scenario, *, round_backend: str = "auto"):
 
 
 def _trace(sc: Scenario, rc: RobustConfig, rounds: int, metrics) -> dict:
-    return {
+    trace = {
         "scenario": sc.name,
         "aggregator": sc.aggregator,
         "attack": sc.attack,
@@ -97,6 +98,12 @@ def _trace(sc: Scenario, rc: RobustConfig, rounds: int, metrics) -> dict:
         "loss_median": [float(v) for v in metrics["loss_median"]],
         "byz_count": [int(v) for v in metrics["byz_count"]],
     }
+    # only compressed scenarios carry the codec key: adding it
+    # unconditionally would invalidate every pre-existing golden file
+    # (compare_traces flags keys present in only one trace)
+    if sc.compression != "none":
+        trace["compression"] = sc.compression
+    return trace
 
 
 def run_scenario(sc: Scenario | str, *, rounds: int | None = None,

@@ -36,6 +36,10 @@ class Scenario:
     schedule: str = "rotating"
     attack_kwargs: tuple = ()        # tuple of (key, value) — hashable
     schedule_kwargs: tuple = ()
+    # wire codec applied to worker reports before aggregation (a registered
+    # name from core/compression.py); "none" keeps the uncompressed float
+    # path every pre-existing scenario was recorded on.
+    compression: str = "none"
     num_workers: int = 20            # m
     num_byzantine: int = 3           # q
     num_batches: int | None = 10     # k (None => paper's canonical choice)
@@ -113,6 +117,17 @@ for _agg in ("trimmed_mean", "coordinate_median", "krum", "geomed"):
     for _attack in ("sign_flip", "alie"):
         register(Scenario(name=_n(_agg, _attack, "rotating"),
                           aggregator=_agg, attack=_attack))
+
+# Communication-compressed campaign (Jin et al. '19 signSGD majority vote):
+# workers report 1-bit packed sign words and the server votes on the wire
+# payload without ever reconstructing float gradients.  Sign steps have unit
+# per-coordinate magnitude regardless of the gradient scale, so the step
+# size drops to keep the sign-descent error floor (~ eta * sqrt(d)) well
+# under the estimation scale of the testbed.
+register(Scenario(name="linreg/sign_majority_static",
+                  aggregator="sign_sgd_majority", attack="sign_flip",
+                  schedule="static", compression="sign",
+                  step_size=0.05, golden=True))
 
 # Checked-in golden traces: one per schedule family plus the mean baselines
 # and one related-work aggregator — compact but covers every code path.

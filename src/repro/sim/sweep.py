@@ -107,6 +107,15 @@ class PodScenario:
     # "gathered" constrains them fully replicated before aggregation (the
     # dense O(d) baseline the big-model gate compares against).
     grad_mode: str = "sharded"
+    # wire codec for the worker reports (core/compression.py): threads into
+    # the lowered step's RobustConfig, so the encode/decode (or native
+    # payload consumption) traces into the compiled module.
+    compression: str = "none"
+    # True lowers the isolated report-wire microcell (lower_wire_scenario)
+    # instead of the full train step — the full step is fwd/bwd-dominated
+    # at production scale, so the codec saving is only measurable on the
+    # report path itself.
+    wire: bool = False
 
     def robust_config(self) -> RobustConfig:
         """The injected aggregation pipeline config (num_batches == k: each
@@ -115,7 +124,7 @@ class PodScenario:
             num_workers=self.num_groups, num_byzantine=self.num_byzantine,
             num_batches=self.num_groups, aggregator=self.aggregator,
             attack=self.attack, round_backend=self.round_backend,
-            gmom_max_iters=8)
+            gmom_max_iters=8, compression=self.compression)
 
     def build_schedule(self) -> byzantine.AttackSchedule:
         return byzantine.make_schedule(
@@ -208,6 +217,64 @@ BIG_MODEL_SCENARIOS = (
 
 
 # ---------------------------------------------------------------------------
+# communication-compressed cells: the §1.4 / Jin et al. '19 wire-cost claim,
+# made a gate.
+#
+# Two FULL train-step cells lower the compressed aggregation end to end at
+# minitron-4b scale (sign_sgd_majority consuming the packed 1-bit wire under
+# the vote-targeting adversary; int8_gmom dequantize-then-GMoM) — they prove
+# the compressed path compiles and keep its collective/memory cells in the
+# record.  The full step is forward/backward-dominated (~4e11 collective
+# B/device either way), so three additional REPORT-WIRE microcells isolate
+# exactly the worker -> server report traffic the codecs shrink:
+# ``compression_wire_problems`` gates sign at >= 25x below the f32 baseline
+# and int8 at >= 3.5x (32 bits -> 1 and -> 8 + per-worker scales).
+
+WIRE_REDUCTION_MIN_SIGN = 25.0
+WIRE_REDUCTION_MIN_INT8 = 3.5
+WIRE_RTOL = 0.05
+
+WIRE_BASELINE_SCENARIO = \
+    _n("16x16", DEFAULT_ARCH, "gmom", "sign_flip", "static") + "/wire"
+WIRE_SIGN_SCENARIO = \
+    _n("16x16", DEFAULT_ARCH, "sign_sgd_majority", "sign_flip", "static") \
+    + "/wire"
+WIRE_INT8_SCENARIO = \
+    _n("16x16", DEFAULT_ARCH, "int8_gmom", "sign_flip", "static") + "/wire"
+
+register(PodScenario(
+    name=_n("16x16", DEFAULT_ARCH, "sign_sgd_majority",
+            "sign_flip_targeted", "static"),
+    aggregator="sign_sgd_majority", attack="sign_flip_targeted",
+    schedule="static", mesh="16x16", compression="sign"))
+register(PodScenario(
+    name=_n("16x16", DEFAULT_ARCH, "int8_gmom", "sign_flip", "static"),
+    aggregator="int8_gmom", attack="sign_flip", schedule="static",
+    mesh="16x16", compression="int8_stochastic"))
+register(PodScenario(
+    name=WIRE_BASELINE_SCENARIO, aggregator="gmom", attack="sign_flip",
+    schedule="static", mesh="16x16", compression="none", wire=True))
+register(PodScenario(
+    name=WIRE_SIGN_SCENARIO, aggregator="sign_sgd_majority",
+    attack="sign_flip", schedule="static", mesh="16x16", compression="sign",
+    wire=True))
+register(PodScenario(
+    name=WIRE_INT8_SCENARIO, aggregator="int8_gmom", attack="sign_flip",
+    schedule="static", mesh="16x16", compression="int8_stochastic",
+    wire=True))
+
+#: the compression cells (outside the full minitron matrix product)
+COMPRESSION_SCENARIOS = (
+    _n("16x16", DEFAULT_ARCH, "sign_sgd_majority", "sign_flip_targeted",
+       "static"),
+    _n("16x16", DEFAULT_ARCH, "int8_gmom", "sign_flip", "static"),
+    WIRE_BASELINE_SCENARIO,
+    WIRE_SIGN_SCENARIO,
+    WIRE_INT8_SCENARIO,
+)
+
+
+# ---------------------------------------------------------------------------
 # lowering one cell
 
 def lower_scenario(ps: PodScenario, *, mesh=None, cfg=None, shape=None,
@@ -235,7 +302,119 @@ def lower_scenario(ps: PodScenario, *, mesh=None, cfg=None, shape=None,
         aggregator=ps.aggregator, attack=ps.attack, schedule=ps.schedule,
         round_backend=ps.round_backend, num_groups=ps.num_groups,
         num_byzantine=ps.num_byzantine, grad_mode=ps.grad_mode,
+        compression=ps.compression,
         compile_seconds=round(art.compile_seconds, 2))
+    return entry
+
+
+def lower_wire_scenario(ps: PodScenario, *, mesh=None, cfg=None, shape=None,
+                        verbose: bool = False) -> dict:
+    """Lower + compile the isolated REPORT WIRE of one compressed cell.
+
+    The full train-step cells are forward/backward-dominated at production
+    scale, so a 25× codec saving on the report would drown in activation
+    traffic.  This lowering prices exactly the worker → server report path
+    of the paper's §5 cost model: each group's report starts partitioned
+    over the mesh ``model`` axis (shard-local encode), the encoded payload
+    is explicitly replicated — that all-gather IS the wire — and the server
+    consumes it fully replicated (decode + aggregate, or the aggregator's
+    native payload path), adding no further collectives.  The report is the
+    flattened (k, param_count) gradient block: wire bytes depend only on
+    the coordinate count, never the parameter-tree structure, and the flat
+    layout keeps the cell's compile cheap.  The attack is upstream of the
+    report and does not trace here (the cell name keeps the axis labels for
+    the record schema only).
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import aggregators, compression
+    from repro.launch import mesh as mesh_lib, steps
+    from repro.roofline import analysis
+
+    if mesh is None:
+        mesh = mesh_lib.make_production_mesh(
+            multi_pod=MESH_MULTI_POD[ps.mesh])
+    cfg_, shape_, _ = steps.input_specs(
+        cfg if cfg is not None else ps.arch, shape or ps.shape,
+        num_groups=ps.num_groups)
+    mesh_name = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    model_n = mesh.shape["model"]
+    m = ps.num_groups
+    # pad the coordinate count so the model-axis split and the 8-per-word
+    # sign packing both stay even (relative overcount < 1e-6 at 4B params)
+    quantum = model_n * 8
+    d_pad = -(-cfg_.param_count() // quantum) * quantum
+    stacked_s = jax.ShapeDtypeStruct((m, d_pad), jnp.float32)
+    key_s = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    codec = compression.get_codec(ps.compression)
+    agg = aggregators.get_aggregator(ps.aggregator)
+    rc = ps.robust_config()
+    part = NamedSharding(mesh, P(None, "model"))
+    rep = NamedSharding(mesh, P())
+
+    def _local(x):
+        if x.ndim >= 2 and x.shape[-1] % model_n == 0:
+            return NamedSharding(
+                mesh, P(*((None,) * (x.ndim - 1) + ("model",))))
+        return rep        # per-worker scales: (m,) — negligible wire weight
+
+    def _pin(tree, spec_of):
+        return jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(x, spec_of(x)), tree)
+
+    def _consume(reports, key, like=None):
+        # mirrors aggregate_reported's metadata-driven kwarg dispatch (the
+        # wire boundary sits between encode and consume, so the one-call
+        # path through aggregate_reported cannot be pinned from outside)
+        kwargs = {}
+        if like is not None:
+            kwargs["like"] = like
+        if agg.needs_num_byzantine:
+            kwargs["num_byzantine"] = rc.num_byzantine
+        if agg.needs_key:
+            kwargs["key"] = jax.random.fold_in(key, 13)
+        if agg.needs_grouping:
+            kwargs.update(num_batches=rc.resolved_num_batches(),
+                          epsilon=rc.epsilon,
+                          grouping_scheme=rc.grouping_scheme,
+                          trim_multiplier=rc.trim_multiplier,
+                          max_iters=rc.gmom_max_iters, tol=rc.gmom_tol,
+                          round_backend=rc.round_backend)
+        return agg(reports, **kwargs)
+
+    def wire_step(stacked, key):
+        stacked = jax.lax.with_sharding_constraint(stacked, part)
+        ckey = jax.random.fold_in(key, 29) if codec.needs_key else None
+        payload = codec.encode(stacked, key=ckey)
+        payload = _pin(payload, _local)          # encode is shard-local
+        payload = _pin(payload, lambda x: rep)   # the wire: gather reports
+        if ps.compression != "none" and agg.native_codec == ps.compression:
+            return _consume(payload, key, like=stacked)
+        if ps.compression != "none":
+            payload = codec.decode(payload, stacked)
+        return _consume(payload, key)
+
+    t0 = time.time()
+    compiled = jax.jit(
+        wire_step, in_shardings=(part, rep)).lower(stacked_s, key_s).compile()
+    elapsed = time.time() - t0
+    record = analysis.build_record(
+        arch=ps.arch if cfg is None else cfg_.name, shape=shape_, cfg=cfg_,
+        mesh_name=mesh_name, num_chips=mesh.size, step="report_wire",
+        compiled=compiled)
+    entry = analysis.sweep_entry(record, scenario=ps.name)
+    entry.update(
+        aggregator=ps.aggregator, attack=ps.attack, schedule=ps.schedule,
+        round_backend=ps.round_backend, num_groups=ps.num_groups,
+        num_byzantine=ps.num_byzantine, grad_mode=ps.grad_mode,
+        compression=ps.compression, compile_seconds=round(elapsed, 2))
+    if verbose:
+        print(f"[wire] {ps.name}: "
+              f"{entry['collective_bytes_per_device']:.3e} B/dev "
+              f"({elapsed:.1f}s)", flush=True)
     return entry
 
 
@@ -248,7 +427,7 @@ def run_sweep(names: list[str] | None = None, *,
     t0 = time.time()
     for i, name in enumerate(names):
         ps = get_pod_scenario(name)
-        entry = lower_scenario(ps)
+        entry = lower_wire_scenario(ps) if ps.wire else lower_scenario(ps)
         scenarios[name] = entry
         if verbose:
             print(f"[sweep {i + 1}/{len(names)}] {name}: "
@@ -267,6 +446,11 @@ def run_sweep(names: list[str] | None = None, *,
         "big_model": {
             "arch": BIG_MODEL_ARCH,
             "scenarios": list(BIG_MODEL_SCENARIOS),
+        },
+        "compression": {
+            "scenarios": list(COMPRESSION_SCENARIOS),
+            "wire_reduction_min_sign": WIRE_REDUCTION_MIN_SIGN,
+            "wire_reduction_min_int8": WIRE_REDUCTION_MIN_INT8,
         },
         "sweep_seconds": round(time.time() - t0, 1),
         "scenarios": scenarios,
@@ -391,6 +575,46 @@ def shard_scaling_problems(scenarios: dict) -> list[str]:
                 f"sharded gmom's {g_sharded:.3e} B "
                 f"(> {KRUM_PEAK_MAX_RATIO:.1f}×) — the flattened-copy "
                 "blowup is back")
+    return problems
+
+
+def compression_wire_problems(scenarios: dict) -> list[str]:
+    """Gate the report-wire compression claims on a fresh sweep payload.
+
+    The sign wire cell's collective bytes must be at least
+    ``WIRE_REDUCTION_MIN_SIGN`` × below the f32 baseline wire cell's
+    (32-bit floats → 1 packed bit/coordinate), and the int8 cell at least
+    ``WIRE_REDUCTION_MIN_INT8`` × below (→ 8 bits + per-worker scales) —
+    each with ``WIRE_RTOL`` slack for padding/partitioner jitter.  Cells
+    absent from the payload are skipped (filtered --check runs), same as
+    :func:`shard_scaling_problems`.
+    """
+    problems: list[str] = []
+    base = scenarios.get(WIRE_BASELINE_SCENARIO)
+    b = base.get("collective_bytes_per_device") if base else None
+    if not b:
+        return problems
+    for name, floor, codec in (
+            (WIRE_SIGN_SCENARIO, WIRE_REDUCTION_MIN_SIGN, "sign"),
+            (WIRE_INT8_SCENARIO, WIRE_REDUCTION_MIN_INT8,
+             "int8_stochastic")):
+        e = scenarios.get(name)
+        if not e:
+            continue
+        n = e.get("collective_bytes_per_device")
+        if not n:
+            problems.append(
+                f"{name}: report-wire cell recorded zero collective bytes "
+                "— the wire all-gather was optimized away; the cell no "
+                "longer measures the report path")
+            continue
+        ratio = b / n
+        if ratio < floor * (1.0 - WIRE_RTOL):
+            problems.append(
+                f"compression wire: {codec} report moves {n:.3e} B/device "
+                f"vs the f32 baseline's {b:.3e} — only {ratio:.1f}× "
+                f"reduction (< {floor:.1f}× floor) — the wire-cost claim "
+                "regressed")
     return problems
 
 
@@ -519,6 +743,7 @@ def main(argv=None) -> int:
             rtol_collective=args.rtol_collective,
             rtol_memory=args.rtol_memory)
         problems += shard_scaling_problems(fresh.get("scenarios", {}))
+        problems += compression_wire_problems(fresh.get("scenarios", {}))
         for n in notes:
             print(f"sweep note: {n}")
         for pr in problems:

@@ -71,10 +71,18 @@ def harness_tree(m: int, scale: int):
 
 def harness_cfg(name: str, *, m: int = HARNESS_M, k: int = HARNESS_K,
                 q: int = HARNESS_Q):
+    from repro.core import aggregators
     from repro.core.robust_train import RobustConfig
+    # an aggregator with a native wire codec is traced through its
+    # COMPRESSED production path (encode -> payload -> native consume):
+    # that is the path the contract claims are about — sign_sgd_majority's
+    # zero-collective guarantee must hold for the packing + vote, and
+    # int8_gmom's d-independence must cover the per-worker scale combine.
+    codec = aggregators.get_aggregator(name).native_codec or "none"
     return RobustConfig(num_workers=m, num_byzantine=q, num_batches=k,
                         attack="none", aggregator=name,
-                        gmom_max_iters=8, gmom_tol=1e-7)
+                        gmom_max_iters=8, gmom_tol=1e-7,
+                        compression=codec)
 
 
 def _specs(tree, axis: str):

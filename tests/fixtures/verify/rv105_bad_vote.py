@@ -1,0 +1,11 @@
+# repro: robust-stat
+"""Fixture: majority-vote accumulation without f32 counts (RV105 x2)."""
+import jax.numpy as jnp
+
+
+def negative_votes(stacked):
+    return jnp.sum(jnp.signbit(stacked), axis=0)    # bool counts, no up-cast
+
+
+def vote_margin(stacked):
+    return jnp.mean(jnp.sign(stacked), axis=0)      # accumulates in g.dtype

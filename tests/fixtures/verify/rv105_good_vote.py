@@ -1,0 +1,11 @@
+# repro: robust-stat
+"""Fixture: f32-accumulated majority-vote counts (clean)."""
+import jax.numpy as jnp
+
+
+def negative_votes(stacked):
+    return jnp.sum(jnp.signbit(stacked).astype(jnp.float32), axis=0)
+
+
+def vote_margin(stacked):
+    return jnp.mean(jnp.sign(stacked).astype(jnp.float32), axis=0)

@@ -1,0 +1,305 @@
+"""Property tests for the gradient-compression codecs (core/compression.py).
+
+Wire-format invariants the aggregation stack builds on:
+
+* ``sign`` round-trips the exact IEEE sign pattern — including −0.0 and
+  subnormals — and its packed bytes are bit-stable across input dtype
+  (f32 vs bf16) and across even/uneven last-dim shapes;
+* ``int8_stochastic`` is unbiased (the mean decode over many keys
+  concentrates on the input at the 3σ rate) with worst-case per-coordinate
+  error below one per-worker scale step, and its scales are per-worker
+  (the quantization-range attack closure);
+* the packed majority vote equals the raw-gradient vote bit for bit.
+
+``hypothesis`` is optional, per the repo convention: when installed the
+properties run under its strategies; otherwise the same checks run over a
+parametrized set of deterministic seeds (tier-1 does not ship hypothesis).
+The exhaustive variants (every uint8 word pattern, a 4096-key
+concentration run) sit behind the ``slow`` marker for the nightly
+``-m ""`` lane.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression
+from repro.core.compression import (majority_vote_packed,
+                                    majority_vote_signs, pack_signs,
+                                    packed_words, unpack_signs)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+FALLBACK_SEEDS = list(range(5))
+
+
+def _random_tree(seed: int):
+    """A stacked-gradient pytree with even and uneven last dims plus a
+    param-dim-free (m,) leaf — the three packing layouts."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(2, 9))
+    d_even = 8 * int(rng.integers(1, 5))
+    d_odd = int(rng.integers(1, 21))
+    return {
+        "w": (rng.normal(size=(m, d_even)) * 10).astype(np.float32),
+        "b": {"x": (rng.normal(size=(m, 3, d_odd)) * 0.1)
+              .astype(np.float32)},
+        "s": rng.normal(size=(m,)).astype(np.float32),
+    }
+
+
+def property_test(*, needs_seed=False):
+    """Run the check under hypothesis when available, else over seeds."""
+    def deco(check):
+        if HAVE_HYPOTHESIS:
+            if needs_seed:
+                return given(tree_strategy,
+                             st.integers(0, 2**31 - 1))(check)
+            return given(tree_strategy)(check)
+
+        @pytest.mark.parametrize("seed", FALLBACK_SEEDS)
+        def fallback(seed):
+            tree = _random_tree(seed)
+            if needs_seed:
+                check(tree, seed + 1000)
+            else:
+                check(tree)
+        fallback.__name__ = check.__name__
+        fallback.__doc__ = check.__doc__
+        return fallback
+    return deco
+
+
+if HAVE_HYPOTHESIS:
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
+    tree_strategy = st.builds(_random_tree, st.integers(0, 2**31 - 1))
+
+
+def _sign_pattern(x):
+    """The exact expected sign decode: −1 where signbit, else +1."""
+    return np.where(np.signbit(x), -1.0, 1.0).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sign codec
+
+@property_test()
+def test_sign_roundtrip_recovers_exact_sign_pattern(tree):
+    codec = compression.get_codec("sign")
+    decoded = codec.decode(codec.encode(tree), tree)
+    for leaf, dec in zip(jax.tree.leaves(tree), jax.tree.leaves(decoded)):
+        np.testing.assert_array_equal(np.asarray(dec), _sign_pattern(leaf))
+        assert dec.dtype == leaf.dtype
+
+
+def test_sign_roundtrip_zero_and_subnormal_edge_cases():
+    """IEEE corner cases: −0.0 and negative subnormals are negative, +0.0
+    and positive subnormals positive (jnp.signbit semantics), infs keep
+    their sign — bit 1 == signbit, no value-magnitude dependence."""
+    x = np.array([[0.0, -0.0, 1e-45, -1e-45, np.inf, -np.inf,
+                   1e38, -1e-38, 5e-324, -5e-324]], np.float32)
+    codec = compression.get_codec("sign")
+    dec = np.asarray(jax.tree.leaves(codec.decode(codec.encode(x), x))[0])
+    np.testing.assert_array_equal(dec, _sign_pattern(x))
+    # −0.0 really voted negative and +0.0 positive
+    assert dec[0, 1] == -1.0 and dec[0, 0] == 1.0
+
+
+@property_test()
+def test_sign_packing_bit_stable_across_dtypes(tree):
+    """f32 and bf16 reports with the same sign pattern pack to the SAME
+    bytes — the wire format is dtype-independent."""
+    f32 = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), tree)
+    bf16 = jax.tree.map(lambda x: jnp.asarray(x, jnp.bfloat16), tree)
+    codec = compression.get_codec("sign")
+    p32 = jax.tree.leaves(codec.encode(f32))
+    p16 = jax.tree.leaves(codec.encode(bf16))
+    for a, b in zip(p32, p16):
+        assert a.dtype == jnp.uint8 and b.dtype == jnp.uint8
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("d", [1, 7, 8, 9, 13, 16, 64])
+def test_sign_packing_even_and_uneven_last_dims(d):
+    """Packing pads the last dim to whole uint8 words with ZERO bits, and
+    unpacking slices the pad back off — any d round-trips."""
+    rng = np.random.default_rng(d)
+    x = rng.normal(size=(3, d)).astype(np.float32)
+    packed = pack_signs(jnp.asarray(x))
+    assert packed.shape == (3, packed_words(d))
+    bits = np.asarray(unpack_signs(packed, d))
+    np.testing.assert_array_equal(bits, np.signbit(x).astype(np.uint8))
+    if d % 8:   # padding bits really are zero
+        full = np.asarray(unpack_signs(packed, packed_words(d) * 8))
+        assert not full[..., d:].any()
+
+
+@property_test()
+def test_majority_vote_packed_equals_raw_vote(tree):
+    """The server's packed-wire vote == the raw-gradient vote, leaf for
+    leaf, bit for bit (ties resolve to +1 on both paths)."""
+    payload = compression.get_codec("sign").encode(tree)
+    raw = majority_vote_signs(tree)
+    packed = majority_vote_packed(payload, tree)
+    for a, b in zip(jax.tree.leaves(raw), jax.tree.leaves(packed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_majority_vote_tie_resolves_positive():
+    x = np.array([[1.0], [-1.0], [2.0], [-2.0]], np.float32)   # 2 vs 2
+    assert np.asarray(jax.tree.leaves(majority_vote_signs(x))[0]) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# int8_stochastic codec
+
+def _int8_roundtrip(tree, key):
+    codec = compression.get_codec("int8_stochastic")
+    payload = codec.encode(tree, key=key)
+    return payload, codec.decode(payload, tree)
+
+
+@property_test(needs_seed=True)
+def test_int8_worst_case_error_below_one_scale_step(tree, seed):
+    """|decode(encode(g)) − g| < scale, per coordinate, per worker: the
+    stochastic rounding moves each coordinate by strictly less than one
+    quantization step of its OWN worker's scale."""
+    payload, decoded = _int8_roundtrip(tree, jax.random.PRNGKey(seed))
+    flat_g = jax.tree.leaves(tree)
+    flat_d = jax.tree.leaves(decoded)
+    flat_s = jax.tree.leaves(payload["scale"])
+    for g, dec, s in zip(flat_g, flat_d, flat_s):
+        err = np.abs(np.asarray(dec, np.float64) - np.asarray(g, np.float64))
+        step = np.asarray(s, np.float64).reshape((-1,) + (1,) * (g.ndim - 1))
+        assert (err <= step * (1 + 1e-6)).all()
+
+
+@property_test(needs_seed=True)
+def test_int8_unbiased_over_many_keys(tree, seed):
+    """E_key[decode(encode(g))] == g over 512 independent keys.
+
+    Two concentration checks (σ = scale / (2·sqrt(K)) is the uniform
+    stochastic-rounding bound on the key-mean of ONE coordinate):
+    * the per-worker aggregate bias — the mean over keys AND coordinates —
+      sits within 3σ/sqrt(n_coords) of zero (a 3σ test on the statistic
+      whose σ actually shrinks with the coordinate count);
+    * every single coordinate's key-mean sits within 5σ (Bonferroni slack
+      for the hundreds of coordinates a tree carries — a flat 3σ bound
+      would fail ~0.3% of coordinates by design).
+    """
+    keys = jax.random.split(jax.random.PRNGKey(seed), 512)
+    codec = compression.get_codec("int8_stochastic")
+
+    def one(key):
+        return codec.decode(codec.encode(tree, key=key), tree)
+
+    stacked = jax.vmap(one)(keys)
+    payload = codec.encode(tree, key=keys[0])
+    for g, dec, s in zip(jax.tree.leaves(tree), jax.tree.leaves(stacked),
+                         jax.tree.leaves(payload["scale"])):
+        err = (np.asarray(dec, np.float64).mean(axis=0)
+               - np.asarray(g, np.float64))
+        step = np.asarray(s, np.float64).reshape((-1,) + (1,) * (g.ndim - 1))
+        sigma = step / (2.0 * np.sqrt(len(keys)))
+        assert (np.abs(err) <= 5.0 * sigma + 1e-7).all()
+        n_coords = err[0].size if err.ndim > 1 else 1
+        bias = err.reshape(err.shape[0], -1).mean(axis=1)
+        tol = 3.0 * sigma.reshape(-1) / np.sqrt(n_coords) + 1e-7
+        assert (np.abs(bias) <= tol).all()
+
+
+def test_int8_scales_are_per_worker_range_attack_closure():
+    """A Byzantine worker reporting 1e6× magnitudes must not inflate the
+    honest workers' quantization step — scales are per-(worker, leaf)."""
+    honest = np.ones((3, 16), np.float32)
+    byz = np.full((1, 16), 1e6, np.float32)
+    tree = np.concatenate([honest, byz])
+    payload, decoded = _int8_roundtrip(tree, jax.random.PRNGKey(0))
+    scale = np.asarray(jax.tree.leaves(payload["scale"])[0])
+    assert scale.shape == (4,)
+    np.testing.assert_allclose(scale[:3], 1.0 / 127.0, rtol=1e-6)
+    # honest rows decode with honest-sized error
+    err = np.abs(np.asarray(decoded)[:3] - honest)
+    assert err.max() <= 1.0 / 127.0 * (1 + 1e-6)
+
+
+def test_int8_zero_leaf_uses_unit_scale():
+    """An all-zero worker report must not divide by zero: scale falls back
+    to 1.0 and the decode is exactly zero."""
+    tree = np.zeros((2, 8), np.float32)
+    payload, decoded = _int8_roundtrip(tree, jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(payload["scale"])[0]), 1.0)
+    np.testing.assert_array_equal(np.asarray(decoded), 0.0)
+
+
+def test_int8_requires_key():
+    with pytest.raises(ValueError, match="PRNG key"):
+        compression.get_codec("int8_stochastic").encode(
+            np.ones((2, 8), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# registry / none codec
+
+def test_registry_has_all_codecs_with_descriptions():
+    assert set(compression.available()) >= {"none", "sign",
+                                            "int8_stochastic"}
+    for name, desc in compression.describe():
+        assert desc.strip(), f"codec {name} has no description"
+    with pytest.raises(KeyError, match="unknown codec"):
+        compression.get_codec("zstd")
+    bits = {n: compression.get_codec(n).bits_per_coordinate
+            for n in ("none", "sign", "int8_stochastic")}
+    assert bits == {"none": 32.0, "sign": 1.0, "int8_stochastic": 8.0}
+
+
+def test_none_codec_is_identity():
+    tree = _random_tree(0)
+    codec = compression.get_codec("none")
+    out = codec.decode(codec.encode(tree), tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# exhaustive variants (nightly -m "" lane)
+
+@pytest.mark.slow
+def test_sign_pack_unpack_exhaustive_word_patterns():
+    """Every uint8 word pattern survives unpack -> repack bit-exactly."""
+    words = jnp.arange(256, dtype=jnp.uint8).reshape(1, 256)
+    bits = unpack_signs(words, 256 * 8)
+    # signbit of (-1)^bit reproduces the bit, so repacking closes the loop
+    x = jnp.where(bits == 1, -1.0, 1.0).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(pack_signs(x)),
+                                  np.asarray(words))
+
+
+@pytest.mark.slow
+def test_int8_unbiased_tight_concentration_4096_keys():
+    """4096-key concentration — an ~3× tighter absolute bound than the
+    tier-1 512-key run, same 5σ-per-coordinate / 3σ-aggregate rates."""
+    tree = _random_tree(7)
+    keys = jax.random.split(jax.random.PRNGKey(7), 4096)
+    codec = compression.get_codec("int8_stochastic")
+    stacked = jax.vmap(
+        lambda k: codec.decode(codec.encode(tree, key=k), tree))(keys)
+    payload = codec.encode(tree, key=keys[0])
+    for g, dec, s in zip(jax.tree.leaves(tree), jax.tree.leaves(stacked),
+                         jax.tree.leaves(payload["scale"])):
+        err = (np.asarray(dec, np.float64).mean(axis=0)
+               - np.asarray(g, np.float64))
+        step = np.asarray(s, np.float64).reshape((-1,) + (1,) * (g.ndim - 1))
+        sigma = step / (2.0 * np.sqrt(len(keys)))
+        assert (np.abs(err) <= 5.0 * sigma + 1e-8).all()
+        n_coords = err[0].size if err.ndim > 1 else 1
+        bias = err.reshape(err.shape[0], -1).mean(axis=1)
+        tol = 3.0 * sigma.reshape(-1) / np.sqrt(n_coords) + 1e-8
+        assert (np.abs(bias) <= tol).all()

@@ -17,3 +17,26 @@ def test_docs_registries_consistent():
     finally:
         sys.path.remove(SCRIPTS)
     assert not problems, "\n".join(problems)
+
+
+def test_undocumented_codec_fails_check_docs():
+    """Registering a wire codec without documenting it must fail the docs
+    gate, same as an undocumented aggregator or attack."""
+    from repro.core import compression
+    sys.path.insert(0, SCRIPTS)
+    try:
+        import check_docs
+        compression.register(
+            "_test_undocumented_codec",
+            "temporary codec for the docs-gate test",
+            encode=lambda tree, **kw: tree,
+            decode=lambda payload, like, **kw: payload)
+        problems = check_docs._codec_problems(
+            check_docs._read(os.path.join("docs", "PAPER_MAP.md")))
+        assert any("_test_undocumented_codec" in p and "PAPER_MAP" in p
+                   for p in problems), problems
+        assert any("_test_undocumented_codec" in p and "BENCHMARKS" in p
+                   for p in problems), problems
+    finally:
+        compression._REGISTRY.pop("_test_undocumented_codec", None)
+        sys.path.remove(SCRIPTS)

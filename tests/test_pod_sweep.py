@@ -58,7 +58,8 @@ def test_registry_covers_full_matrix_on_both_meshes():
     names = sweep.available()
     expected = (len(sweep.POD_ATTACKS) * len(sweep.POD_SCHEDULES)
                 * len(sweep.POD_AGGREGATORS) * len(sweep.POD_MESHES)
-                + len(sweep.BIG_MODEL_SCENARIOS))
+                + len(sweep.BIG_MODEL_SCENARIOS)
+                + len(sweep.COMPRESSION_SCENARIOS))
     assert len(names) == expected
     for mesh in sweep.POD_MESHES:
         for agg in sweep.POD_AGGREGATORS:
@@ -203,6 +204,72 @@ def test_shard_scaling_gate_flags_krum_blowup():
     assert "krum" in problems[0]
 
 
+def test_compression_cells_registered():
+    """The §1.4 wire-cost cells: two full-step compressed aggregation cells
+    plus the three report-wire microcells (f32 baseline / sign / int8)."""
+    for name in sweep.COMPRESSION_SCENARIOS:
+        ps = sweep.get_pod_scenario(name)
+        assert ps.mesh == "16x16" and ps.arch == sweep.DEFAULT_ARCH
+        assert ps.wire == name.endswith("/wire"), name
+        assert ps.robust_config().compression == ps.compression
+    wire = {sweep.get_pod_scenario(n).compression
+            for n in sweep.COMPRESSION_SCENARIOS if n.endswith("/wire")}
+    assert wire == {"none", "sign", "int8_stochastic"}
+    full = {(sweep.get_pod_scenario(n).aggregator,
+             sweep.get_pod_scenario(n).attack)
+            for n in sweep.COMPRESSION_SCENARIOS if not n.endswith("/wire")}
+    assert ("sign_sgd_majority", "sign_flip_targeted") in full
+    assert ("int8_gmom", "sign_flip") in full
+
+
+def _fake_wire_payload(*, f32=8.0e10, sign=None, int8=None) -> dict:
+    if sign is None:
+        sign = f32 / 32.0
+    if int8 is None:
+        int8 = f32 / 4.0
+    return {sweep.WIRE_BASELINE_SCENARIO:
+            _fake_entry(sweep.WIRE_BASELINE_SCENARIO, coll=f32),
+            sweep.WIRE_SIGN_SCENARIO:
+            _fake_entry(sweep.WIRE_SIGN_SCENARIO, coll=sign),
+            sweep.WIRE_INT8_SCENARIO:
+            _fake_entry(sweep.WIRE_INT8_SCENARIO, coll=int8)}
+
+
+def test_wire_gate_passes_on_clean_ratios():
+    assert sweep.compression_wire_problems(_fake_wire_payload()) == []
+
+
+def test_wire_gate_flags_lost_sign_reduction():
+    scenarios = _fake_wire_payload(f32=8.0e10, sign=8.0e10 / 20.0)
+    problems = sweep.compression_wire_problems(scenarios)
+    assert len(problems) == 1
+    assert "sign" in problems[0] and "wire-cost claim" in problems[0]
+
+
+def test_wire_gate_flags_lost_int8_reduction():
+    scenarios = _fake_wire_payload(f32=8.0e10, int8=8.0e10 / 2.0)
+    problems = sweep.compression_wire_problems(scenarios)
+    assert len(problems) == 1 and "int8" in problems[0]
+
+
+def test_wire_gate_tolerates_rtol_and_flags_optimized_away_wire():
+    # just inside the 5% slack of the 25x floor: no problem
+    ok = _fake_wire_payload(f32=8.0e10,
+                            sign=8.0e10 / (25.0 * (1 - 0.04)))
+    assert sweep.compression_wire_problems(ok) == []
+    gone = _fake_wire_payload()
+    gone[sweep.WIRE_SIGN_SCENARIO]["collective_bytes_per_device"] = 0.0
+    problems = sweep.compression_wire_problems(gone)
+    assert len(problems) == 1 and "optimized away" in problems[0]
+
+
+def test_wire_gate_skips_absent_cells():
+    assert sweep.compression_wire_problems({}) == []
+    base_only = {sweep.WIRE_BASELINE_SCENARIO:
+                 _fake_entry(sweep.WIRE_BASELINE_SCENARIO)}
+    assert sweep.compression_wire_problems(base_only) == []
+
+
 def test_shard_scaling_gate_skips_absent_cells():
     """Filtered --check runs / --fresh-from subsets without the big-model
     cells must not trip the gate."""
@@ -303,9 +370,11 @@ def test_checked_in_record_covers_registry():
     assert not missing, f"record missing scenarios: {missing[:5]} ..."
     recorded_meshes = {e["mesh"] for e in scenarios.values()}
     assert set(sweep.POD_MESHES) <= recorded_meshes, recorded_meshes
-    for entry in scenarios.values():
+    for name, entry in scenarios.items():
         assert entry["collective_bytes_per_device"] > 0
-        assert entry["step"] == "train_step"
+        expect = "report_wire" if sweep.get_pod_scenario(name).wire \
+            else "train_step"
+        assert entry["step"] == expect, name
 
 
 # ---------------------------------------------------------------------------

@@ -138,12 +138,18 @@ BLOCKED_SCRIPT = textwrap.dedent("""
     in_specs = jax.tree.map(in_spec, base)
     checked = 0
     for name in aggregators.available():
-        for k in (4, 3):                          # even / uneven grouping
+        # rules with a native wire codec run TWICE: once on raw floats and
+        # once through their compressed production path (encode happens
+        # inside aggregate_reported on both sides; the encode itself is
+        # shard-local, so the bitwise contract must survive it)
+        native = aggregators.get_aggregator(name).native_codec
+        for codec in ("none",) + ((native,) if native else ()):
+          for k in (4, 3):                        # even / uneven grouping
             for dt in (jnp.float32, jnp.bfloat16):
                 stacked = jax.tree.map(lambda x: x.astype(dt), base)
                 cfg = RobustConfig(
                     num_workers=m, num_byzantine=1, num_batches=k,
-                    attack="none", aggregator=name,
+                    attack="none", aggregator=name, compression=codec,
                     gmom_max_iters=8, gmom_tol=1e-7)
 
                 virtual = ShardSpec(num_shards=S, mode="virtual",
@@ -165,10 +171,10 @@ BLOCKED_SCRIPT = textwrap.dedent("""
                         jax.tree.leaves(sharded)):
                     path, a = pa
                     assert a.shape == b.shape and a.dtype == b.dtype, \\
-                        (name, k, str(dt), str(path), a.shape, b.shape)
+                        (name, codec, k, str(dt), str(path), a.shape, b.shape)
                     assert np.array_equal(np.asarray(a), np.asarray(b)), (
-                        "sharded != gathered (bitwise)", name, k, str(dt),
-                        str(path),
+                        "sharded != gathered (bitwise)", name, codec, k,
+                        str(dt), str(path),
                         float(np.max(np.abs(np.asarray(a, np.float64)
                                             - np.asarray(b, np.float64)))))
                 checked += 1

@@ -89,6 +89,19 @@ def test_rv105_good_clean():
     assert lint("rv105_good.py") == []
 
 
+def test_rv105_bad_vote_accumulation():
+    """Majority-vote counting is a robust-stat reduction too: summing raw
+    sign bits over the member axis without a visible f32 up-cast trips the
+    same rule as batch means."""
+    fs = lint("rv105_bad_vote.py")
+    assert ids_lines(fs) == [("RV105", 7), ("RV105", 11)]
+    assert all("axis=0" in f.message for f in fs)
+
+
+def test_rv105_good_vote_clean():
+    assert lint("rv105_good_vote.py") == []
+
+
 def test_rv106_bad_carry_outside_train_state():
     fs = lint("rv106_bad.py")
     assert [f.rule for f in fs] == ["RV106"] * 2
@@ -267,6 +280,68 @@ LAYER_B_SCRIPT = textwrap.dedent("""
 def test_layer_b_contracts_and_misdeclared_rejection():
     res = subprocess.run(
         [sys.executable, "-c", LAYER_B_SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env=dict(os.environ, PYTHONPATH=os.path.join(REPO, "src")))
+    assert res.returncode == 0, (res.stdout[-800:], res.stderr[-4000:])
+    assert "OK" in res.stdout
+
+
+# --------------------------------------------------------------------------
+# Layer B × compression: aggregators with a native wire codec are traced
+# through their COMPRESSED production path (harness_cfg switches the codec
+# on), so the contract claims cover the encode + consume pipeline — and a
+# mis-declared compressed rule is rejected just like a float one.
+
+LAYER_B_COMPRESSED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from repro.core import aggregators, compression
+    from repro.verify import contracts
+
+    # sign_sgd_majority: packing + vote must keep the coordinate_wise
+    # promise — ZERO cross-shard collectives on the compressed path
+    fs = contracts.check_aggregator("sign_sgd_majority", num_shards=4)
+    assert fs == [], [f.format() for f in fs]
+
+    # int8_gmom: the per-worker scale combine plus the gmom reductions
+    # must stay d-independent (norm_based)
+    fs = contracts.check_aggregator("int8_gmom", num_shards=4)
+    assert fs == [], [f.format() for f in fs]
+
+    # deliberately mis-declared compressed rule: consumes the sign wire
+    # natively and claims coordinate_wise, but psums the vote outcome
+    # over the mesh — must be rejected in BOTH views (jaxpr and HLO)
+    @aggregators.register("_test_misdeclared_wire",
+                          "claims coordinate_wise on the sign wire but "
+                          "psums vote counts over the mesh",
+                          shard_contract="coordinate_wise",
+                          native_codec="sign")
+    def _misdeclared_wire(payload, *, like=None, **_kw):
+        out = compression.majority_vote_packed(payload, like)
+        def leaf(g):
+            s = jax.lax.psum(jnp.sum(g.astype(jnp.float32)), "model")
+            return (g.astype(jnp.float32) + s).astype(g.dtype)
+        return jax.tree.map(leaf, out)
+
+    try:
+        fs = contracts.check_aggregator("_test_misdeclared_wire",
+                                        num_shards=4)
+        assert any(f.rule == "RV201" for f in fs), \\
+            [f.format() for f in fs]
+        jaxpr_hit = any("jaxpr" in f.message for f in fs
+                        if f.rule == "RV201")
+        hlo_hit = any("HLO" in f.message for f in fs if f.rule == "RV201")
+        assert jaxpr_hit and hlo_hit, [f.format() for f in fs]
+    finally:
+        aggregators._REGISTRY.pop("_test_misdeclared_wire", None)
+    print("OK")
+""")
+
+
+def test_layer_b_compressed_contracts_and_misdeclared_wire():
+    res = subprocess.run(
+        [sys.executable, "-c", LAYER_B_COMPRESSED_SCRIPT],
         capture_output=True, text=True, timeout=600,
         env=dict(os.environ, PYTHONPATH=os.path.join(REPO, "src")))
     assert res.returncode == 0, (res.stdout[-800:], res.stderr[-4000:])
