@@ -40,8 +40,8 @@ def run(arch, aggregator, attack, schedule="rotating"):
     opt_state = opt.init(params)
     batch = jax.tree.map(lambda *xs: jax.numpy.stack(xs),
                          *[stream.batch(i) for i in range(STEPS)])
-    _, _, _, metrics = runner(params, opt_state, batch, jax.random.PRNGKey(9),
-                              per_round_batches=True)
+    *_, metrics = runner(params, opt_state, batch, jax.random.PRNGKey(9),
+                         per_round_batches=True)
     return [float(v) for v in metrics["loss_median"]]
 
 

@@ -17,7 +17,11 @@ Fails (non-zero exit / raised AssertionError from pytest) when:
   from the docs/BENCHMARKS.md sweep tables;
 * a repro.verify rule (RV1xx/RV2xx) is missing from the
   docs/STATIC_ANALYSIS.md catalog, or the catalog documents a rule ID
-  that is no longer registered (stale docs fail too).
+  that is no longer registered (stale docs fail too);
+* a registered arrival schedule (repro.core.staleness) is missing from
+  the docs/ASYNC.md schedule table or the PAPER_MAP synchrony rows;
+* a prose doc references a repo file path that does not exist, or points
+  into the build container's /root/related staging area.
 
 Run directly::
 
@@ -30,6 +34,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -99,6 +104,82 @@ def collect_problems() -> list[str]:
     problems += _pod_sweep_problems(paper_map)
     problems += _codec_problems(paper_map)
     problems += _verify_rules_problems(paper_map)
+    problems += _arrival_problems(paper_map)
+    problems += _dead_path_problems()
+    return problems
+
+
+def _arrival_problems(paper_map: str) -> list[str]:
+    """The asynchrony contract: every registered arrival schedule must be
+    documented where its semantics live — the docs/ASYNC.md schedule table
+    AND the PAPER_MAP synchrony rows — with a non-empty registry
+    description (the registry IS the documentation surface, same
+    discipline as the aggregator / attack / codec registries)."""
+    from repro.core import staleness
+
+    problems: list[str] = []
+    async_md = _read(os.path.join("docs", "ASYNC.md"))
+    for name, description in staleness.describe():
+        if f"`{name}`" not in async_md:
+            problems.append(
+                f"arrival schedule {name!r} is registered but missing from "
+                "docs/ASYNC.md — add its row to the schedule table")
+        if f"`{name}`" not in paper_map:
+            problems.append(
+                f"arrival schedule {name!r} is registered but missing from "
+                "docs/PAPER_MAP.md — add it to the §2 synchrony-assumption "
+                "rows")
+        if not description.strip():
+            problems.append(
+                f"arrival schedule {name!r} has an empty registry "
+                "description")
+    return problems
+
+
+# Backtick-quoted repo paths in the prose docs (`a/b.py`, `docs/X.md`, …).
+# Requires a `/` so module dotted-paths don't match; skips glob/template
+# candidates (`*`, `<`, `{`) and the documented-as-uncommitted scratch
+# outputs under benchmarks/results/.
+_DOC_PATH_RE = re.compile(
+    r"`([A-Za-z0-9_.\-/]+/[A-Za-z0-9_.\-/]+"
+    r"\.(?:py|md|json|yml|yaml|sh))`")
+_DEAD_PATH_DOCS = ("README.md", "ROADMAP.md", "docs/ASYNC.md",
+                   "docs/BENCHMARKS.md", "docs/PAPER_MAP.md",
+                   "docs/STATIC_ANALYSIS.md", "docs/DESIGN.md")
+
+
+def _dead_path_problems(doc_texts: dict[str, str] | None = None) -> list[str]:
+    """No dead pointers in the prose docs: every backtick-quoted file path
+    must exist in the repo (tried verbatim, under src/, and under
+    src/repro/ — the docs use all three conventions), and no doc may
+    reference the build container's /root/related staging area, which does
+    not exist for readers of the published repo (the ROADMAP once pointed
+    there — PR 9 replaced those with upstream URLs).
+
+    ``doc_texts`` overrides the on-disk docs for the negative-path test in
+    tests/test_docs_map.py."""
+    problems: list[str] = []
+    if doc_texts is None:
+        doc_texts = {rel: _read(rel) for rel in _DEAD_PATH_DOCS
+                     if os.path.exists(os.path.join(REPO, rel))}
+    for rel, text in doc_texts.items():
+        for path in sorted(set(_DOC_PATH_RE.findall(text))):
+            if path.startswith("benchmarks/results/"):
+                continue
+            candidates = (path, os.path.join("src", path),
+                          os.path.join("src", "repro", path))
+            if not any(os.path.exists(os.path.join(REPO, c))
+                       for c in candidates):
+                problems.append(
+                    f"{rel} references `{path}` but no such file exists "
+                    "(tried verbatim, src/, src/repro/) — fix or drop the "
+                    "dead pointer")
+        for i, line in enumerate(text.splitlines(), start=1):
+            if "/root/related" in line:
+                problems.append(
+                    f"{rel}:{i} references the /root/related staging area, "
+                    "which does not exist for repo readers — cite the "
+                    "upstream URL instead")
     return problems
 
 
@@ -234,8 +315,9 @@ def main() -> int:
         print(f"check_docs: FAILED ({len(problems)} problem(s))")
         return 1
     print("check_docs: ok — registries, PAPER_MAP, README table, "
-          "BENCH_round_kernel.json, the pod-sweep record/docs, and the "
-          "repro.verify rule catalog are consistent")
+          "BENCH_round_kernel.json, the pod-sweep record/docs, the "
+          "repro.verify rule catalog, the ASYNC.md arrival table, and "
+          "every doc-referenced file path are consistent")
     return 0
 
 

@@ -6,6 +6,7 @@ Public API:
     byzantine.get_attack / available / sample_byzantine_mask
     RobustConfig, make_robust_train_step, per_worker_grads, aggregate
     TrainState, init_train_state, advance, save/restore_train_state
+    staleness: StalenessBuffer, make_arrival / available_arrivals
     grouping.make_grouping / choose_num_batches
     theory: paper constants & closed forms
 """
@@ -17,7 +18,17 @@ from repro.core.geometric_median import (  # noqa: F401
     batch_mean_norms,
     weiszfeld_step,
 )
-from repro.core import aggregators, byzantine, grouping, theory  # noqa: F401
+from repro.core import (  # noqa: F401
+    aggregators, byzantine, grouping, staleness, theory)
+from repro.core.staleness import (  # noqa: F401
+    ArrivalSchedule,
+    StalenessBuffer,
+    arrival_from_config,
+    available_arrivals,
+    init_buffer,
+    make_arrival,
+    merge_reports,
+)
 from repro.core.shard_aggregation import (  # noqa: F401
     ShardSpec,
     blocked_partial_sum,

@@ -62,6 +62,17 @@ class RobustConfig:
     # consumes the payload directly (sign_sgd_majority votes on packed
     # sign bits without ever reconstructing float gradients).
     compression: str = "none"
+    # arrival model (repro.core.staleness): which workers deliver a fresh
+    # report each round.  "all_sync" with staleness_bound=0 is the paper's
+    # synchronous regime and compiles to the identical HLO (empty buffer
+    # carry).  Any other setting threads a bounded-staleness buffer through
+    # the scan: fresh reports merge with <=tau-stale buffered ones, rows
+    # are discount**age-weighted, and age > tau rows are hard-dropped.
+    # Semantics: docs/ASYNC.md.
+    arrival: str = "all_sync"
+    staleness_bound: int = 0
+    staleness_discount: float = 0.7
+    arrival_kwargs: tuple = ()          # tuple of (key, value) — hashable
 
     def resolved_num_batches(self) -> int:
         if self.num_batches is not None:
@@ -91,7 +102,7 @@ def per_worker_grads(loss_fn: Callable, params, worker_batches, *,
 
 
 def aggregate_reported(reported_grads, cfg: RobustConfig, *, key,
-                       shard_spec=None):
+                       shard_spec=None, staleness=None):
     """Robust aggregation of already-(possibly-)corrupted reports.
 
     Which config fields an aggregator receives is driven by its registry
@@ -113,9 +124,20 @@ def aggregate_reported(reported_grads, cfg: RobustConfig, *, key,
     case the payload is passed straight through (with the original tree as
     the ``like=`` shape/dtype template) and the rule consumes the wire
     format directly.
+
+    ``staleness`` is an ``(age, bound, discount)`` triple from the
+    bounded-staleness buffer (repro.core.staleness): rows are rescaled by
+    their normalized ``discount**age`` weights (exactly 1.0 when fresh,
+    exactly 0.0 past the bound) BEFORE the wire codec sees them — the
+    server weighs what it has, then encodes/aggregates as usual.
     """
     agg = aggregators.get_aggregator(cfg.aggregator)
     kwargs: dict[str, Any] = {}
+    if staleness is not None:
+        from repro.core import staleness as staleness_lib
+        age, bound, discount = staleness
+        reported_grads = staleness_lib.apply_staleness(
+            reported_grads, age, bound, discount=discount)
     if cfg.compression != "none":
         from repro.core import compression
         codec = compression.get_codec(cfg.compression)
@@ -213,15 +235,18 @@ def schedule_from_config(cfg: RobustConfig) -> byzantine.AttackSchedule:
 def make_run_rounds(loss_fn: Callable, optimizer, cfg: RobustConfig, *,
                     schedule: byzantine.AttackSchedule | None = None,
                     loss_kwargs: dict | None = None,
-                    extra_metrics: Callable | None = None):
+                    extra_metrics: Callable | None = None,
+                    arrival=None):
     """Build a ``lax.scan``-compiled N-round trainer.
 
     Returns ``run(params, opt_state, worker_batches, key, *, num_rounds,
-    start_round=0, attack_state=None, per_round_batches=False) ->
-    (params, opt_state, attack_state, metrics)`` where ``metrics`` leaves are
-    stacked over rounds.  All N rounds trace into ONE jitted scan whose carry
-    is (params, opt_state, attack_state) — a 50-round CPU scenario runs in
-    seconds instead of N dispatches of a per-step jit.
+    start_round=0, attack_state=None, stale_buffer=None,
+    per_round_batches=False) ->
+    (params, opt_state, attack_state, stale_buffer, metrics)`` where
+    ``metrics`` leaves are stacked over rounds.  All N rounds trace into ONE
+    jitted scan whose carry is (params, opt_state, attack_state,
+    stale_buffer) — a 50-round CPU scenario runs in seconds instead of N
+    dispatches of a per-step jit.
 
     Round ``t`` uses ``jax.random.fold_in(key, t)`` as its step key, so the
     scan reproduces a Python loop over ``make_robust_train_step`` driven with
@@ -245,22 +270,40 @@ def make_run_rounds(loss_fn: Callable, optimizer, cfg: RobustConfig, *,
     ``attack_state`` lets chunked callers (checkpoint boundaries) carry the
     adversary's memory across calls — prefer driving the runner through
     ``repro.core.train_state.advance``, which threads the whole
-    (params, opt_state, attack_state, round, key, history) TrainState and
-    is what save/restore_train_state checkpoint.  ``extra_metrics(params,
-    agg_grad)`` appends scenario-specific metrics (e.g. estimation error vs
-    true θ).
+    (params, opt_state, attack_state, round, key, history, stale_buffer)
+    TrainState and is what save/restore_train_state checkpoint.
+    ``extra_metrics(params, agg_grad)`` appends scenario-specific metrics
+    (e.g. estimation error vs true θ).
+
+    ``arrival`` (a :class:`repro.core.staleness.ArrivalSchedule`, default
+    ``staleness.arrival_from_config(cfg)``) turns on the bounded-staleness
+    path: each round the arrival model picks the fresh reporters, stale
+    workers contribute their buffered last report (age-discounted, dropped
+    past τ), and the buffer joins the scan carry / ``stale_buffer``
+    TrainState field.  When the arrival resolves to None (``all_sync``,
+    τ=0) the carry slot is the empty pytree ``()`` and the compiled
+    computation is unchanged — the synchronous path stays bit-identical.
     """
     schedule = schedule if schedule is not None else schedule_from_config(cfg)
     loss_kwargs = loss_kwargs or {}
+    if arrival is None:
+        from repro.core import staleness as staleness_lib
+        arrival = staleness_lib.arrival_from_config(cfg)
 
     def _run(params, opt_state, worker_batches, key, attack_state,
-             num_rounds, start_round, per_round_batches):
+             stale_buffer, num_rounds, start_round, per_round_batches):
         if attack_state is None:
             attack_state = schedule.init_state()
+        if arrival is None:
+            stale_buffer = ()
+        elif stale_buffer is None:
+            from repro.core import staleness as staleness_lib
+            stale_buffer = staleness_lib.init_buffer(
+                params, arrival.num_workers, arrival.staleness_bound)
         rounds = start_round + jnp.arange(num_rounds)
 
         def body(carry, xs):
-            params, opt_state, astate = carry
+            params, opt_state, astate, stale_buffer = carry
             if per_round_batches:
                 t, batch = xs
             else:
@@ -269,7 +312,17 @@ def make_run_rounds(loss_fn: Callable, optimizer, cfg: RobustConfig, *,
             stacked, losses = per_worker_grads(loss_fn, params, batch,
                                                loss_kwargs=loss_kwargs)
             reported, mask, astate = schedule.apply(stacked, key_t, t, astate)
-            agg_grad = aggregate_reported(reported, cfg, key=key_t)
+            if arrival is None:
+                agg_grad = aggregate_reported(reported, cfg, key=key_t)
+            else:
+                from repro.core import staleness as staleness_lib
+                fresh = arrival.arrive(key_t, t, mask)
+                reported, stale_buffer = staleness_lib.merge_reports(
+                    stale_buffer, reported, fresh)
+                agg_grad = aggregate_reported(
+                    reported, cfg, key=key_t,
+                    staleness=(stale_buffer.age, stale_buffer.bound,
+                               cfg.staleness_discount))
             updates, opt_state = optimizer.update(agg_grad, opt_state, params)
             params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
                                   params, updates)
@@ -282,15 +335,18 @@ def make_run_rounds(loss_fn: Callable, optimizer, cfg: RobustConfig, *,
                 "agg_grad_norm": gnorm,
                 "byz_count": jnp.sum(mask.astype(jnp.int32)),
             }
+            if arrival is not None:
+                metrics["stale_count"] = jnp.sum(
+                    (stale_buffer.age > 0).astype(jnp.int32))
             if extra_metrics is not None:
                 metrics.update(extra_metrics(params, agg_grad))
-            return (params, opt_state, astate), metrics
+            return (params, opt_state, astate, stale_buffer), metrics
 
         xs = (rounds, worker_batches) if per_round_batches else rounds
         carry, metrics = jax.lax.scan(
-            body, (params, opt_state, attack_state), xs)
-        params, opt_state, attack_state = carry
-        return params, opt_state, attack_state, metrics
+            body, (params, opt_state, attack_state, stale_buffer), xs)
+        params, opt_state, attack_state, stale_buffer = carry
+        return params, opt_state, attack_state, stale_buffer, metrics
 
     # start_round stays dynamic so chunked callers (checkpoint boundaries)
     # don't recompile per chunk.
@@ -298,13 +354,18 @@ def make_run_rounds(loss_fn: Callable, optimizer, cfg: RobustConfig, *,
                                             "per_round_batches"))
 
     def run(params, opt_state, worker_batches, key, *, num_rounds=None,
-            start_round=0, attack_state=None, per_round_batches=False):
+            start_round=0, attack_state=None, stale_buffer=None,
+            per_round_batches=False):
         if num_rounds is None:
             if not per_round_batches:
                 raise ValueError("num_rounds is required with a fixed batch")
             num_rounds = jax.tree.leaves(worker_batches)[0].shape[0]
+        if isinstance(stale_buffer, tuple) and stale_buffer == ():
+            # the disabled-path TrainState default — _run re-derives it
+            stale_buffer = None
         return jitted(params, opt_state, worker_batches, key, attack_state,
-                      num_rounds, start_round, per_round_batches)
+                      stale_buffer, num_rounds, start_round,
+                      per_round_batches)
 
     return run
 

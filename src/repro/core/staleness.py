@@ -1,0 +1,271 @@
+"""Bounded-staleness gradient buffering: asynchrony for Byzantine GD.
+
+The paper's system model (§2) is fully synchronous: the server waits for
+all m gradient reports before aggregating, so one slow or partitioned
+worker stalls every round.  This module relaxes that assumption the way
+production parameter servers do — with a *bounded-staleness* buffer:
+
+* ``StalenessBuffer`` keeps each worker's last reported gradient and its
+  age (rounds since it was fresh).  A round aggregates fresh reports
+  merged with buffered ones whose age is at most the bound τ.
+* Rows are weighted by ``discount ** age`` and renormalized so the live
+  weights sum to m (the weighted-mean normalization keeps the aggregate's
+  scale independent of how many workers straggle); rows older than τ get
+  weight zero — the hard drop.
+* An ``ArrivalSchedule`` (registry mirroring ``byzantine.AttackSchedule``)
+  decides which workers deliver fresh reports each round: honest straggler
+  models and the adversarial ``byzantine_max_stale``, where the Byzantine
+  workers choose their own staleness (zero — poison at full weight) while
+  delaying every honest worker to the bound.
+
+Semantics doc: docs/ASYNC.md (enforced by scripts/check_docs.py — every
+registered arrival schedule must appear there and in docs/PAPER_MAP.md).
+
+Checkpoint contract (PR 2): the buffer rides the training-scan carry, so
+it MUST live in ``TrainState`` (field ``stale_buffer``; ``()`` when the
+async path is disabled) with fixed structure and array leaves only — ages
+are int32 (repro.verify RV107 pins both properties).  τ=0 with
+``all_sync`` keeps the buffer empty and is bit-identical to the
+synchronous trainer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class StalenessBuffer(NamedTuple):
+    """Per-worker last-reported gradients + ages + the staleness bound τ.
+
+    ``grads`` mirrors the stacked-gradient pytree (leaves (m, *shape));
+    ``age`` is (m,) int32 — 0 means "reported this round"; ``bound`` is a
+    0-d int32 array so the whole buffer is a pure array pytree (the
+    TrainState serialization contract).
+    """
+    grads: Any
+    age: jax.Array
+    bound: jax.Array
+
+
+def init_buffer(params, num_workers: int, bound: int) -> StalenessBuffer:
+    """Round-zero buffer: zero gradients aged past the bound, so nothing
+    uninitialized can ever enter an aggregate (age > τ rows drop)."""
+    grads = jax.tree.map(
+        lambda p: jnp.zeros((num_workers,) + p.shape, p.dtype), params)
+    return StalenessBuffer(
+        grads=grads,
+        age=jnp.full((num_workers,), bound + 1, jnp.int32),
+        bound=jnp.asarray(bound, jnp.int32))
+
+
+def merge_reports(buf: StalenessBuffer, reported, fresh):
+    """One round's buffer update: fresh rows replace their buffered entry
+    (age resets to 0), stale rows keep the buffered gradient and age by one.
+
+    Returns ``(merged_rows, new_buffer)``; ``merged_rows`` are the
+    *unweighted* union (fresh rows pass through bit-exactly), and
+    ``new_buffer.grads`` is that same union — the buffer stores raw
+    reports, never discounted ones, so a row's weight depends only on its
+    CURRENT age.
+    """
+    fresh = fresh.astype(bool)
+
+    def leaf(rep, old):
+        sel = fresh.reshape((fresh.shape[0],) + (1,) * (rep.ndim - 1))
+        return jnp.where(sel, rep, old)
+
+    merged = jax.tree.map(leaf, reported, buf.grads)
+    new_buf = StalenessBuffer(
+        grads=merged,
+        age=jnp.where(fresh, 0, buf.age + 1).astype(jnp.int32),
+        bound=buf.bound)
+    return merged, new_buf
+
+
+def staleness_weights(age, bound, *, discount: float):
+    """Per-row aggregation weight: ``discount ** age`` while age <= bound,
+    exactly 0.0 beyond it (the hard drop).  Fresh rows get exactly 1.0 —
+    not a computed power — so the all-fresh round is bit-identical to the
+    synchronous path."""
+    w = jnp.where(age == 0, jnp.float32(1.0),
+                  jnp.power(jnp.float32(discount), age.astype(jnp.float32)))
+    return jnp.where(age <= bound, w, jnp.float32(0.0))
+
+
+def apply_staleness(rows, age, bound, *, discount: float):
+    """Scale merged rows by their normalized staleness weights.
+
+    Row j is multiplied by ``m * w_j / sum(w)`` (f32 accumulate, cast back
+    at the boundary): the weighted mean of the scaled rows equals the
+    w-weighted mean of the raw rows, so the aggregate's scale does not
+    depend on how many workers straggle.  Dropped rows (age > bound)
+    scale to exactly zero.  When every row is fresh the scale is exactly
+    1.0 and the rows pass through bit-identically.
+    """
+    m = age.shape[0]
+    w = staleness_weights(age, bound, discount=discount)
+    total = jnp.maximum(jnp.sum(w), jnp.float32(1e-12))
+    scale = (m * w) / total
+
+    def leaf(g):
+        s = scale.reshape((m,) + (1,) * (g.ndim - 1))
+        return (g.astype(jnp.float32) * s).astype(g.dtype)
+
+    return jax.tree.map(leaf, rows)
+
+
+# ---------------------------------------------------------------------------
+# arrival schedules: who delivers a fresh report this round
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalSchedule:
+    """Which workers report fresh each round, as a pure scan-traceable
+    function — the asynchrony twin of ``byzantine.AttackSchedule``.
+
+    ``arrive(key, round_index, byz_mask) -> (m,) bool`` must be
+    jit/scan-friendly and stateless: everything it needs derives from the
+    per-round key, the round index, and the attack schedule's current
+    Byzantine mask (so adversarial arrival models can collude with the
+    attack — the same omniscience convention the attacks follow).
+    """
+    name: str
+    num_workers: int
+    staleness_bound: int
+    arrive: Callable[..., jax.Array]
+
+
+_ARRIVAL_REGISTRY: dict[str, Callable[..., ArrivalSchedule]] = {}
+_ARRIVAL_DESCRIPTIONS: dict[str, str] = {}
+
+
+def register_arrival(name: str, description: str = ""):
+    def deco(builder):
+        _ARRIVAL_REGISTRY[name] = builder
+        _ARRIVAL_DESCRIPTIONS[name] = description
+        return builder
+    return deco
+
+
+def make_arrival(name: str, *, num_workers: int, staleness_bound: int,
+                 **kwargs) -> ArrivalSchedule:
+    if name not in _ARRIVAL_REGISTRY:
+        raise KeyError(
+            f"unknown arrival schedule {name!r}; have "
+            f"{sorted(_ARRIVAL_REGISTRY)}")
+    return _ARRIVAL_REGISTRY[name](
+        num_workers=num_workers, staleness_bound=staleness_bound, **kwargs)
+
+
+def available_arrivals() -> list[str]:
+    return sorted(_ARRIVAL_REGISTRY)
+
+
+def describe() -> list[tuple[str, str]]:
+    """(name, description) rows for every registered arrival schedule —
+    the docs/ASYNC.md table is generated from exactly this."""
+    return [(n, _ARRIVAL_DESCRIPTIONS[n]) for n in available_arrivals()]
+
+
+def arrival_from_config(cfg) -> ArrivalSchedule | None:
+    """The configured arrival model, or None when the async path is
+    disabled (``all_sync`` with τ=0 — the bit-identical synchronous
+    default every pre-existing config resolves to)."""
+    if cfg.arrival == "all_sync" and cfg.staleness_bound == 0:
+        return None
+    return make_arrival(cfg.arrival, num_workers=cfg.num_workers,
+                        staleness_bound=cfg.staleness_bound,
+                        **dict(cfg.arrival_kwargs))
+
+
+@register_arrival("all_sync",
+                  "every worker reports fresh every round (the paper's §2 "
+                  "synchronous model; with τ=0 this IS the sync trainer)")
+def all_sync(*, num_workers, staleness_bound, **_kw) -> ArrivalSchedule:
+    def arrive(key, round_index, byz_mask):
+        del key, round_index, byz_mask
+        return jnp.ones((num_workers,), bool)
+
+    return ArrivalSchedule("all_sync", num_workers, staleness_bound, arrive)
+
+
+@register_arrival("straggler_fixed",
+                  "a fixed set of num_stragglers workers delivers only "
+                  "every `period` rounds (defaults to τ+1: maximally "
+                  "stale but never dropped)")
+def straggler_fixed(*, num_workers, staleness_bound, num_stragglers: int = 2,
+                    period: int | None = None, **_kw) -> ArrivalSchedule:
+    period = (staleness_bound + 1) if period is None else period
+    period = max(1, period)
+
+    def arrive(key, round_index, byz_mask):
+        del key, byz_mask
+        slow = jnp.arange(num_workers) < num_stragglers
+        return jnp.logical_or(~slow, (round_index % period) == 0)
+
+    return ArrivalSchedule("straggler_fixed", num_workers, staleness_bound,
+                           arrive)
+
+
+@register_arrival("straggler_rotating",
+                  "a fresh random num_stragglers-subset misses each round "
+                  "(transient network jitter — the realistic production "
+                  "regime)")
+def straggler_rotating(*, num_workers, staleness_bound,
+                       num_stragglers: int = 2, **_kw) -> ArrivalSchedule:
+    from repro.core.byzantine import sample_byzantine_mask
+
+    def arrive(key, round_index, byz_mask):
+        del byz_mask
+        # decorrelate from the attack schedule's mask draw on the same key
+        slow = sample_byzantine_mask(
+            jax.random.fold_in(key, 31), num_workers, num_stragglers,
+            rotate=True, round_index=round_index)
+        return ~slow
+
+    return ArrivalSchedule("straggler_rotating", num_workers,
+                           staleness_bound, arrive)
+
+
+@register_arrival("partition",
+                  "a worker block drops off the network for a round window "
+                  "[start_round, start_round+length) — ages past τ and is "
+                  "hard-dropped until the partition heals")
+def partition(*, num_workers, staleness_bound, block_start: int = 0,
+              block_size: int = 2, start_round: int = 5, length: int = 10,
+              **_kw) -> ArrivalSchedule:
+    def arrive(key, round_index, byz_mask):
+        del key, byz_mask
+        idx = jnp.arange(num_workers)
+        in_block = jnp.logical_and(idx >= block_start,
+                                   idx < block_start + block_size)
+        in_window = jnp.logical_and(round_index >= start_round,
+                                    round_index < start_round + length)
+        return ~jnp.logical_and(in_block, in_window)
+
+    return ArrivalSchedule("partition", num_workers, staleness_bound, arrive)
+
+
+@register_arrival("byzantine_max_stale",
+                  "adversarial asynchrony: Byzantine workers choose zero "
+                  "staleness (fresh poison at full weight every round) "
+                  "while delaying every honest worker to the bound τ — "
+                  "honest mass decays as discount^age, so large τ lets "
+                  "stale-poisoning win (the pinned break point)")
+def byzantine_max_stale(*, num_workers, staleness_bound,
+                        **_kw) -> ArrivalSchedule:
+    period = staleness_bound + 1
+
+    def arrive(key, round_index, byz_mask):
+        del key
+        # honest worker j refreshes only when (t + j) % (τ+1) == 0 — the
+        # adversary (who controls the network) staggers honest arrivals so
+        # their ages spread over 0..τ; the colluders always deliver.
+        stagger = (round_index + jnp.arange(num_workers)) % period == 0
+        return jnp.logical_or(byz_mask.astype(bool), stagger)
+
+    return ArrivalSchedule("byzantine_max_stale", num_workers,
+                           staleness_bound, arrive)

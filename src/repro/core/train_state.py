@@ -18,6 +18,10 @@ interrupted-then-resumed run is bit-identical to an uninterrupted one:
                   (round t folds in t, so the key is constant across chunks)
     history       accumulated per-round metrics, dict[str, (round_index,)]
                   float32 arrays — byte-stable across save/restore
+    stale_buffer  the bounded-staleness gradient buffer
+                  (``repro.core.staleness.StalenessBuffer``; ``()`` when the
+                  async path is disabled — fixed structure, array leaves,
+                  int32 ages per repro.verify RV107)
 
 Serialization goes through ``repro.checkpoint`` (format_version 2,
 dtype-strict restore).  ``restore_train_state`` rebuilds the example pytree
@@ -49,17 +53,27 @@ class TrainState(NamedTuple):
     round_index: jax.Array
     base_key: jax.Array
     history: Any
+    # () when the async path is disabled: a zero-leaf pytree adds nothing to
+    # the checkpoint, so pre-staleness checkpoints restore unchanged.
+    stale_buffer: Any = ()
 
 
 def init_train_state(params, opt_state, base_key, *,
                      schedule: byzantine.AttackSchedule | None = None,
-                     ) -> TrainState:
-    """Round-zero state: fresh adversary memory, empty history."""
+                     arrival=None) -> TrainState:
+    """Round-zero state: fresh adversary memory, empty history, and —
+    when an ``ArrivalSchedule`` is given — an empty staleness buffer."""
     attack_state = schedule.init_state() if schedule is not None else ()
+    stale_buffer = ()
+    if arrival is not None:
+        from repro.core import staleness
+        stale_buffer = staleness.init_buffer(
+            params, arrival.num_workers, arrival.staleness_bound)
     return TrainState(params=params, opt_state=opt_state,
                       attack_state=attack_state,
                       round_index=jnp.zeros((), jnp.int32),
-                      base_key=base_key, history={})
+                      base_key=base_key, history={},
+                      stale_buffer=stale_buffer)
 
 
 def append_history(history, metrics) -> dict:
@@ -96,17 +110,18 @@ def advance(run, state: TrainState, worker_batches, *, num_rounds=None,
     chunk appended and ``round_index`` advanced, so chunked execution with a
     checkpoint at any chunk boundary replays bit-identically.
     """
-    params, opt_state, attack_state, metrics = run(
+    params, opt_state, attack_state, stale_buffer, metrics = run(
         state.params, state.opt_state, worker_batches, state.base_key,
         num_rounds=num_rounds, start_round=state.round_index,
-        attack_state=state.attack_state,
+        attack_state=state.attack_state, stale_buffer=state.stale_buffer,
         per_round_batches=per_round_batches)
     n = int(jax.tree.leaves(metrics)[0].shape[0])
     return TrainState(
         params=params, opt_state=opt_state, attack_state=attack_state,
         round_index=state.round_index + jnp.asarray(n, jnp.int32),
         base_key=state.base_key,
-        history=append_history(state.history, metrics)), metrics
+        history=append_history(state.history, metrics),
+        stale_buffer=stale_buffer), metrics
 
 
 def save_train_state(directory: str, state: TrainState, *,
@@ -136,6 +151,7 @@ def _history_example(manifest: dict) -> dict:
 def restore_train_state(directory: str, step: int, example_params,
                         example_opt_state, *,
                         schedule: byzantine.AttackSchedule | None = None,
+                        arrival=None,
                         allow_cast: bool = False,
                         manifest: dict | None = None) -> TrainState:
     """Dtype-strict restore of a TrainState checkpoint.
@@ -144,7 +160,11 @@ def restore_train_state(directory: str, step: int, example_params,
     (format_version 1) params-only checkpoints AND bare pytrees saved
     through ``checkpoint.save`` without the ``train_state`` payload tag —
     restore those with ``repro.checkpoint.restore`` instead.  Pass a
-    pre-read ``manifest`` to skip re-reading it from disk.
+    pre-read ``manifest`` to skip re-reading it from disk.  ``arrival``
+    must match the saved run's arrival model: with one, the example carries
+    an empty ``StalenessBuffer`` whose leaves the checkpoint fills; without
+    one the ``stale_buffer`` slot is the empty pytree ``()`` (what every
+    pre-staleness checkpoint holds).
     """
     from repro import checkpoint
     if manifest is None:
@@ -160,6 +180,11 @@ def restore_train_state(directory: str, step: int, example_params,
             f"checkpoint at {directory!r} step {step} is not a TrainState "
             f"(payload={manifest.get('payload')!r}); it was saved as a "
             "bare pytree — restore it with repro.checkpoint.restore")
+    example_buffer = ()
+    if arrival is not None:
+        from repro.core import staleness
+        example_buffer = staleness.init_buffer(
+            example_params, arrival.num_workers, arrival.staleness_bound)
     example = TrainState(
         params=example_params, opt_state=example_opt_state,
         attack_state=schedule.init_state() if schedule is not None else (),
@@ -169,6 +194,7 @@ def restore_train_state(directory: str, step: int, example_params,
         # invites copy-paste into real seeding paths (the PR 5 random_select
         # bug class, repro.verify RV102); zeros of the raw key layout cannot.
         base_key=jnp.zeros((2,), jnp.uint32),
-        history=_history_example(manifest))
+        history=_history_example(manifest),
+        stale_buffer=example_buffer)
     return checkpoint.restore(directory, step, example,
                               allow_cast=allow_cast)

@@ -28,7 +28,7 @@ from repro import checkpoint, optim
 from repro.core import (RobustConfig, aggregators, byzantine,
                         init_train_state, make_run_rounds,
                         restore_train_state, save_train_state,
-                        schedule_from_config)
+                        schedule_from_config, staleness)
 from repro.core.train_state import advance, history_rows
 from repro.configs import ARCHITECTURES, get_config
 from repro.data.tokens import TokenStream
@@ -52,7 +52,8 @@ def build_cpu_batch(cfg, stream: TokenStream, step: int, key):
     return batch
 
 
-def resume_train_state(ckpt_dir, params, opt_state, schedule, step_key):
+def resume_train_state(ckpt_dir, params, opt_state, schedule, step_key,
+                       arrival=None):
     """Restore the latest checkpoint in ``ckpt_dir`` into a TrainState.
 
     Returns ``(state, restored_step)`` — ``(fresh state, 0)`` when there is
@@ -64,14 +65,16 @@ def resume_train_state(ckpt_dir, params, opt_state, schedule, step_key):
     everything else reinitializes, and a loud warning says so; the next
     save writes the full state.
     """
-    state = init_train_state(params, opt_state, step_key, schedule=schedule)
+    state = init_train_state(params, opt_state, step_key, schedule=schedule,
+                             arrival=arrival)
     step = checkpoint.latest_step(ckpt_dir) if ckpt_dir else None
     if step is None:
         return state, 0
     manifest = checkpoint.read_manifest(ckpt_dir, step)
     if manifest.get("payload") == "train_state":
         state = restore_train_state(ckpt_dir, step, params, opt_state,
-                                    schedule=schedule, manifest=manifest)
+                                    schedule=schedule, arrival=arrival,
+                                    manifest=manifest)
         print(f"[train] restored full TrainState (round {step}, "
               f"schedule {schedule.name!r}) from {ckpt_dir}")
         return state, step
@@ -95,7 +98,9 @@ def train_cpu(args) -> dict:
     rc = RobustConfig(num_workers=m, num_byzantine=args.byzantine,
                       attack=args.attack, aggregator=args.aggregator,
                       num_batches=args.num_batches,
-                      round_backend=args.round_backend)
+                      round_backend=args.round_backend,
+                      arrival=args.arrival,
+                      staleness_bound=args.staleness_bound)
     opt = optim.adamw(args.lr)
     loss_fn = lambda p, b: model_lib.loss_fn(p, b, cfg)  # noqa: E731
     if args.schedule:
@@ -107,7 +112,9 @@ def train_cpu(args) -> dict:
     # Scan-compiled multi-round runner: rounds run in chunks of
     # --scan-chunk, each chunk a single XLA dispatch (the Python loop only
     # handles logging and checkpoint boundaries).
-    run = make_run_rounds(loss_fn, opt, rc, schedule=schedule)
+    arrival = staleness.arrival_from_config(rc)
+    run = make_run_rounds(loss_fn, opt, rc, schedule=schedule,
+                          arrival=arrival)
 
     key = jax.random.PRNGKey(args.seed)
     params = model_lib.init(key, cfg)
@@ -117,7 +124,7 @@ def train_cpu(args) -> dict:
     # stream re-derives from args); the step keys themselves are restored
     # from the checkpoint.
     state, start = resume_train_state(args.ckpt_dir, params, opt_state,
-                                      schedule, step_key)
+                                      schedule, step_key, arrival=arrival)
 
     chunk = max(1, args.scan_chunk)
     if args.ckpt_dir:
@@ -146,6 +153,8 @@ def train_cpu(args) -> dict:
     result = {"arch": args.arch, "aggregator": args.aggregator,
               "attack": args.attack, "byzantine": args.byzantine,
               "schedule": schedule.name,
+              "arrival": args.arrival,
+              "staleness_bound": args.staleness_bound,
               "resumed_from": start,
               "final_loss": history[-1]["loss_median"] if history else None,
               "first_loss": history[0]["loss_median"] if history else None,
@@ -190,6 +199,15 @@ def main(argv=None):
                         "vs jnp reference (auto: fused on TPU)")
     p.add_argument("--aggregator", default="gmom",
                    choices=aggregators.available())
+    p.add_argument("--arrival", default="all_sync",
+                   choices=staleness.available_arrivals(),
+                   help="arrival model: which workers report fresh each "
+                        "round (docs/ASYNC.md); stale workers contribute "
+                        "their bounded-staleness buffered gradient")
+    p.add_argument("--staleness-bound", type=int, default=0,
+                   dest="staleness_bound",
+                   help="max buffered-gradient age tau (0 with all_sync = "
+                        "the paper's synchronous path, bit-identical)")
     p.add_argument("--batch", type=int, default=16)
     p.add_argument("--seq-len", type=int, default=64)
     p.add_argument("--lr", type=float, default=1e-3)

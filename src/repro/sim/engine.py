@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro import optim
 from repro.core import (RobustConfig, byzantine, init_train_state,
                         make_run_rounds, restore_train_state,
-                        save_train_state)
+                        save_train_state, staleness)
 from repro.core.train_state import TrainState, advance
 from repro.data import regression
 from repro.sim.scenarios import Scenario, get_scenario
@@ -59,7 +59,10 @@ def _build_run(sc: Scenario, *, round_backend: str = "auto"):
                       aggregator=sc.aggregator, attack=sc.attack,
                       attack_kwargs=sc.attack_kwargs,
                       round_backend=round_backend,
-                      compression=sc.compression)
+                      compression=sc.compression,
+                      arrival=sc.arrival,
+                      staleness_bound=sc.staleness_bound,
+                      arrival_kwargs=sc.arrival_kwargs)
     opt = optim.sgd(sc.step_size)
     theta_star = ds.theta_star
 
@@ -68,13 +71,15 @@ def _build_run(sc: Scenario, *, round_backend: str = "auto"):
         return {"est_error": jnp.linalg.norm(params - theta_star)}
 
     schedule = build_schedule(sc)
+    arrival = staleness.arrival_from_config(rc)
     run = make_run_rounds(regression.squared_loss, opt, rc,
-                          schedule=schedule, extra_metrics=extra_metrics)
+                          schedule=schedule, extra_metrics=extra_metrics,
+                          arrival=arrival)
     theta0 = jnp.zeros((sc.dim,))
     state = init_train_state(theta0, opt.init(theta0),
                              jax.random.fold_in(key, 999),
-                             schedule=schedule)
-    return run, state, regression.worker_batches(ds), rc, schedule
+                             schedule=schedule, arrival=arrival)
+    return run, state, regression.worker_batches(ds), rc, schedule, arrival
 
 
 def _trace(sc: Scenario, rc: RobustConfig, rounds: int, metrics) -> dict:
@@ -103,6 +108,12 @@ def _trace(sc: Scenario, rc: RobustConfig, rounds: int, metrics) -> dict:
     # (compare_traces flags keys present in only one trace)
     if sc.compression != "none":
         trace["compression"] = sc.compression
+    # same discipline for the async path: only staleness-enabled scenarios
+    # carry the arrival keys and the per-round stale_count
+    if sc.arrival != "all_sync" or sc.staleness_bound > 0:
+        trace["arrival"] = sc.arrival
+        trace["staleness_bound"] = sc.staleness_bound
+        trace["stale_count"] = [int(v) for v in metrics["stale_count"]]
     return trace
 
 
@@ -112,7 +123,7 @@ def run_scenario(sc: Scenario | str, *, rounds: int | None = None,
     if isinstance(sc, str):
         sc = get_scenario(sc)
     rounds = sc.rounds if rounds is None else rounds
-    run, state, batches, rc, _ = _build_run(sc, round_backend=round_backend)
+    run, state, batches, rc, _, _ = _build_run(sc, round_backend=round_backend)
     state, _ = advance(run, state, batches, num_rounds=rounds)
     return _trace(sc, rc, rounds, state.history)
 
@@ -133,12 +144,13 @@ def replay_scenario(sc: Scenario | str, ckpt_dir: str, *,
     if isinstance(sc, str):
         sc = get_scenario(sc)
     rounds = sc.rounds if rounds is None else rounds
-    run, state, batches, rc, schedule = _build_run(sc)
+    run, state, batches, rc, schedule, arrival = _build_run(sc)
     if resume:
         step = checkpoint.latest_step(ckpt_dir)
         if step is not None:
             state = restore_train_state(ckpt_dir, step, state.params,
-                                        state.opt_state, schedule=schedule)
+                                        state.opt_state, schedule=schedule,
+                                        arrival=arrival)
     while int(state.round_index) < rounds:
         n = min(ckpt_every, rounds - int(state.round_index))
         state, _ = advance(run, state, batches, num_rounds=n)
@@ -157,10 +169,11 @@ def restore_scenario_state(sc: Scenario | str, ckpt_dir: str,
     from repro import checkpoint
     if isinstance(sc, str):
         sc = get_scenario(sc)
-    _, state, _, _, schedule = _build_run(sc)
+    _, state, _, _, schedule, arrival = _build_run(sc)
     if step is None:
         step = checkpoint.latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {ckpt_dir!r}")
     return restore_train_state(ckpt_dir, step, state.params,
-                               state.opt_state, schedule=schedule)
+                               state.opt_state, schedule=schedule,
+                               arrival=arrival)

@@ -40,6 +40,12 @@ class Scenario:
     # name from core/compression.py); "none" keeps the uncompressed float
     # path every pre-existing scenario was recorded on.
     compression: str = "none"
+    # arrival model + staleness bound (core/staleness.py, docs/ASYNC.md);
+    # "all_sync"/0 is the synchronous path every pre-existing scenario was
+    # recorded on (identical HLO — no buffer in the carry).
+    arrival: str = "all_sync"
+    staleness_bound: int = 0
+    arrival_kwargs: tuple = ()       # tuple of (key, value) — hashable
     num_workers: int = 20            # m
     num_byzantine: int = 3           # q
     num_batches: int | None = 10     # k (None => paper's canonical choice)
@@ -128,6 +134,15 @@ register(Scenario(name="linreg/sign_majority_static",
                   aggregator="sign_sgd_majority", attack="sign_flip",
                   schedule="static", compression="sign",
                   step_size=0.05, golden=True))
+
+# Bounded-staleness campaign (docs/ASYNC.md): a rotating random straggler
+# pair delivers up to τ=2-round-old buffered gradients while the rotating
+# sign_flip colluders stay live — GMoM under asynchrony + attack at once.
+# Golden: the trace (incl. per-round stale_count) is byte-stable and replays
+# bit-exactly through interrupted resume with a non-empty buffer.
+register(Scenario(name=_n("gmom", "sign_flip", "rotating") + "/stale",
+                  arrival="straggler_rotating", staleness_bound=2,
+                  golden=True))
 
 # Checked-in golden traces: one per schedule family plus the mean baselines
 # and one related-work aggregator — compact but covers every code path.

@@ -116,6 +116,13 @@ class PodScenario:
     # at production scale, so the codec saving is only measurable on the
     # report path itself.
     wire: bool = False
+    # arrival model + staleness bound (core/staleness.py, docs/ASYNC.md);
+    # with stale=True the cell lowers the isolated staleness-merge microcell
+    # (lower_stale_scenario): buffer merge + age weighting + aggregation on
+    # the report block, same isolation rationale as the wire cells.
+    arrival: str = "all_sync"
+    staleness_bound: int = 0
+    stale: bool = False
 
     def robust_config(self) -> RobustConfig:
         """The injected aggregation pipeline config (num_batches == k: each
@@ -124,7 +131,8 @@ class PodScenario:
             num_workers=self.num_groups, num_byzantine=self.num_byzantine,
             num_batches=self.num_groups, aggregator=self.aggregator,
             attack=self.attack, round_backend=self.round_backend,
-            gmom_max_iters=8, compression=self.compression)
+            gmom_max_iters=8, compression=self.compression,
+            arrival=self.arrival, staleness_bound=self.staleness_bound)
 
     def build_schedule(self) -> byzantine.AttackSchedule:
         return byzantine.make_schedule(
@@ -275,6 +283,43 @@ COMPRESSION_SCENARIOS = (
 
 
 # ---------------------------------------------------------------------------
+# bounded-staleness cells: the docs/ASYNC.md async path, priced at scale.
+#
+# Two STALENESS-MERGE microcells (same isolation rationale as the wire
+# cells: the full step is fwd/bwd-dominated) lower the per-round async
+# server work at minitron-4b/16×16 — buffer merge (where-select over the
+# report block), int32 age update, normalized discount**age weighting, and
+# the gmom aggregation of the merged rows — under the rotating-straggler
+# arrival with the paper-scale bound τ=2.  One cell keeps the buffer
+# partitioned over the model axis (the shard-local layout, O(d/shards)
+# buffer memory per chip); the paired /gathered cell replicates it — the
+# dense baseline — so the record holds both peak-memory numbers and the
+# --check gate pins their collective/memory cells like every other cell.
+
+STALE_ARRIVAL = "straggler_rotating"
+STALE_BOUND = 2
+
+STALE_SHARDED_SCENARIO = \
+    _n("16x16", DEFAULT_ARCH, "gmom", "sign_flip", "rotating") + "/stale"
+STALE_GATHERED_SCENARIO = STALE_SHARDED_SCENARIO + "/gathered"
+
+register(PodScenario(
+    name=STALE_SHARDED_SCENARIO, aggregator="gmom", attack="sign_flip",
+    schedule="rotating", mesh="16x16", arrival=STALE_ARRIVAL,
+    staleness_bound=STALE_BOUND, stale=True))
+register(PodScenario(
+    name=STALE_GATHERED_SCENARIO, aggregator="gmom", attack="sign_flip",
+    schedule="rotating", mesh="16x16", arrival=STALE_ARRIVAL,
+    staleness_bound=STALE_BOUND, stale=True, grad_mode="gathered"))
+
+#: the staleness cells (outside the full minitron matrix product)
+STALE_SCENARIOS = (
+    STALE_SHARDED_SCENARIO,
+    STALE_GATHERED_SCENARIO,
+)
+
+
+# ---------------------------------------------------------------------------
 # lowering one cell
 
 def lower_scenario(ps: PodScenario, *, mesh=None, cfg=None, shape=None,
@@ -418,6 +463,92 @@ def lower_wire_scenario(ps: PodScenario, *, mesh=None, cfg=None, shape=None,
     return entry
 
 
+def lower_stale_scenario(ps: PodScenario, *, mesh=None, cfg=None, shape=None,
+                         verbose: bool = False) -> dict:
+    """Lower + compile the isolated STALENESS MERGE of one async cell.
+
+    Prices exactly the per-round server work the bounded-staleness path
+    adds (docs/ASYNC.md): merge the fresh reports into the buffer
+    (where-select over the (m, d) report block), update the int32 ages,
+    weight the merged rows by their normalized ``discount**age``, and run
+    the aggregator on the result.  The report block and the buffer share
+    the flattened (m, param_count) layout of the wire cells; grad_mode
+    decides whether the buffer lives partitioned over the ``model`` axis
+    (shard-local — O(d/shards) buffer bytes per chip) or replicated (the
+    dense baseline).  The arrival mask derives from the round index and the
+    per-round key only, so the whole cell is one jit with no host state.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import staleness as staleness_lib
+    from repro.core.robust_train import aggregate_reported
+    from repro.launch import mesh as mesh_lib, steps
+    from repro.roofline import analysis
+
+    if mesh is None:
+        mesh = mesh_lib.make_production_mesh(
+            multi_pod=MESH_MULTI_POD[ps.mesh])
+    cfg_, shape_, _ = steps.input_specs(
+        cfg if cfg is not None else ps.arch, shape or ps.shape,
+        num_groups=ps.num_groups)
+    mesh_name = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    model_n = mesh.shape["model"]
+    m = ps.num_groups
+    quantum = model_n * 8
+    d_pad = -(-cfg_.param_count() // quantum) * quantum
+    stacked_s = jax.ShapeDtypeStruct((m, d_pad), jnp.float32)
+    age_s = jax.ShapeDtypeStruct((m,), jnp.int32)
+    step_s = jax.ShapeDtypeStruct((), jnp.int32)
+    key_s = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    rc = ps.robust_config()
+    arrival = staleness_lib.make_arrival(
+        ps.arrival, num_workers=m, staleness_bound=ps.staleness_bound)
+    part = NamedSharding(mesh, P(None, "model"))
+    rep = NamedSharding(mesh, P())
+    buf_sharding = part if ps.grad_mode == "sharded" else rep
+
+    def stale_step(stacked, buf_grads, age, t, key):
+        stacked = jax.lax.with_sharding_constraint(stacked, part)
+        buf_grads = jax.lax.with_sharding_constraint(buf_grads, buf_sharding)
+        buf = staleness_lib.StalenessBuffer(
+            grads=buf_grads, age=age.astype(jnp.int32),
+            bound=jnp.asarray(ps.staleness_bound, jnp.int32))
+        fresh = arrival.arrive(key, t, jnp.zeros((m,), bool))
+        merged, buf = staleness_lib.merge_reports(buf, stacked, fresh)
+        agg = aggregate_reported(
+            merged, rc, key=key,
+            staleness=(buf.age, buf.bound, rc.staleness_discount))
+        new_grads = jax.lax.with_sharding_constraint(buf.grads, buf_sharding)
+        return agg, new_grads, buf.age
+
+    t0 = time.time()
+    compiled = jax.jit(
+        stale_step,
+        in_shardings=(part, buf_sharding, rep, rep, rep),
+    ).lower(stacked_s, stacked_s, age_s, step_s, key_s).compile()
+    elapsed = time.time() - t0
+    record = analysis.build_record(
+        arch=ps.arch if cfg is None else cfg_.name, shape=shape_, cfg=cfg_,
+        mesh_name=mesh_name, num_chips=mesh.size, step="stale_report",
+        compiled=compiled)
+    entry = analysis.sweep_entry(record, scenario=ps.name)
+    entry.update(
+        aggregator=ps.aggregator, attack=ps.attack, schedule=ps.schedule,
+        round_backend=ps.round_backend, num_groups=ps.num_groups,
+        num_byzantine=ps.num_byzantine, grad_mode=ps.grad_mode,
+        compression=ps.compression, arrival=ps.arrival,
+        staleness_bound=ps.staleness_bound,
+        compile_seconds=round(elapsed, 2))
+    if verbose:
+        print(f"[stale] {ps.name}: "
+              f"{entry['collective_bytes_per_device']:.3e} B/dev "
+              f"({elapsed:.1f}s)", flush=True)
+    return entry
+
+
 def run_sweep(names: list[str] | None = None, *,
               verbose: bool = True) -> dict:
     """Lower every named (default: all registered) scenario; returns the
@@ -427,7 +558,12 @@ def run_sweep(names: list[str] | None = None, *,
     t0 = time.time()
     for i, name in enumerate(names):
         ps = get_pod_scenario(name)
-        entry = lower_wire_scenario(ps) if ps.wire else lower_scenario(ps)
+        if ps.wire:
+            entry = lower_wire_scenario(ps)
+        elif ps.stale:
+            entry = lower_stale_scenario(ps)
+        else:
+            entry = lower_scenario(ps)
         scenarios[name] = entry
         if verbose:
             print(f"[sweep {i + 1}/{len(names)}] {name}: "
@@ -451,6 +587,11 @@ def run_sweep(names: list[str] | None = None, *,
             "scenarios": list(COMPRESSION_SCENARIOS),
             "wire_reduction_min_sign": WIRE_REDUCTION_MIN_SIGN,
             "wire_reduction_min_int8": WIRE_REDUCTION_MIN_INT8,
+        },
+        "staleness": {
+            "scenarios": list(STALE_SCENARIOS),
+            "arrival": STALE_ARRIVAL,
+            "staleness_bound": STALE_BOUND,
         },
         "sweep_seconds": round(time.time() - t0, 1),
         "scenarios": scenarios,

@@ -1,4 +1,4 @@
-"""Layer A: the AST contract lint (rules RV101–RV106).
+"""Layer A: the AST contract lint (rules RV101–RV107).
 
 Pure ``ast`` — no jax import, no execution of the linted code — so the lint
 runs in milliseconds over all of ``src/`` and is safe to point at arbitrary
@@ -382,9 +382,78 @@ def rv106(ctx: SourceContext,
 
 
 # --------------------------------------------------------------------------
+# RV107 — StalenessBuffer integrity: every construction passes an
+# integer-dtype age vector, and the buffer stays TrainState-resident
+# (a ``stale_buffer`` field must exist).  A float age drifts under
+# accumulated where/add rounding and silently mis-weights or never drops
+# stale rows; a buffer outside TrainState is the RV106 bug class again.
+
+_INT_DTYPES = ("int8", "int16", "int32", "int64", "uint8", "uint16",
+               "uint32", "uint64")
+
+
+def _subtree_has_int_dtype(node: ast.AST) -> bool:
+    """True when the age-argument subtree visibly pins an integer dtype:
+    ``jnp.int32`` / ``"int32"`` as a dtype arg or an ``.astype`` target."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and sub.value in _INT_DTYPES:
+            return True
+        chain = _attr_chain(sub)
+        if chain and chain[-1] in _INT_DTYPES:
+            return True
+    return False
+
+
+def _buffer_age_arg(call: ast.Call) -> ast.AST | None:
+    for kw in call.keywords:
+        if kw.arg == "age":
+            return kw.value
+    if len(call.args) >= 2:       # StalenessBuffer(grads, age, bound)
+        return call.args[1]
+    return None
+
+
+def rv107(ctx: SourceContext,
+          fields: tuple[str, ...] | None = None) -> list[Finding]:
+    out = []
+    first_ctor = None
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _attr_chain(node.func)[-1:] != ["StalenessBuffer"]:
+            continue
+        if first_ctor is None:
+            first_ctor = node
+        age = _buffer_age_arg(node)
+        if age is None:
+            out.append(_finding(
+                "RV107", ctx, node,
+                "StalenessBuffer constructed without an age vector — the "
+                "bounded-staleness drop rule (docs/ASYNC.md) is undefined "
+                "without per-worker ages"))
+        elif not _subtree_has_int_dtype(age):
+            out.append(_finding(
+                "RV107", ctx, node,
+                "StalenessBuffer age vector without a visible integer "
+                "dtype (jnp.int32 / .astype(jnp.int32)) — float ages "
+                "drift under accumulated arithmetic and break the exact "
+                "age > τ drop rule (docs/ASYNC.md)"))
+    if first_ctor is not None:
+        if fields is None:
+            fields = train_state_fields()
+        if "stale_buffer" not in fields:
+            out.append(_finding(
+                "RV107", ctx, first_ctor,
+                "StalenessBuffer is constructed but TrainState has no "
+                "'stale_buffer' field — buffer state outside TrainState "
+                "breaks bit-exact resume (PR 2 contract)"))
+    return out
+
+
+# --------------------------------------------------------------------------
 # driver
 
-_ALL_RULES = (rv101, rv102, rv103, rv104, rv105, rv106)
+_ALL_RULES = (rv101, rv102, rv103, rv104, rv105, rv106, rv107)
 
 
 def lint_file(path: str, src: str | None = None) -> list[Finding]:

@@ -89,6 +89,11 @@ _rule("RV106", "training-scan carry element not backed by a TrainState "
       "field", "A",
       "PR 2: bit-exact resume checkpoints exactly TrainState; state that "
       "rides the scan carry outside it silently breaks resume")
+_rule("RV107", "StalenessBuffer with non-integer ages or not "
+      "TrainState-resident", "A",
+      "PR 9: a float age vector drifts under accumulated where/add "
+      "rounding and breaks the exact age > τ drop rule; a buffer outside "
+      "TrainState is the RV106 lost-carry bug class for the async path")
 _rule("RV201", "coordinate_wise aggregator lowers with cross-shard "
       "collectives", "B",
       "PR 6 shard-local contract: coordinate-wise rules must be "

@@ -1,0 +1,22 @@
+# repro: train-scan
+"""Fixture: StalenessBuffer built with float ages (RV107)."""
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+
+class StalenessBuffer(NamedTuple):
+    grads: Any
+    age: Any
+    bound: Any
+
+
+def make_buffer(grads, m, bound):
+    # age starts as the float default dtype and is updated with float
+    # arithmetic — drifts away from exact integers under accumulation
+    return StalenessBuffer(grads, jnp.zeros((m,)), jnp.asarray(bound))
+
+
+def tick(buf, fresh):
+    return StalenessBuffer(buf.grads, jnp.where(fresh, 0.0, buf.age + 1.0),
+                           buf.bound)

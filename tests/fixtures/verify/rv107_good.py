@@ -1,0 +1,22 @@
+# repro: train-scan
+"""Fixture: StalenessBuffer with int32 ages everywhere (clean)."""
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+
+class StalenessBuffer(NamedTuple):
+    grads: Any
+    age: Any
+    bound: Any
+
+
+def make_buffer(grads, m, bound):
+    return StalenessBuffer(grads, jnp.full((m,), bound + 1, jnp.int32),
+                           jnp.asarray(bound, jnp.int32))
+
+
+def tick(buf, fresh):
+    return StalenessBuffer(
+        buf.grads, jnp.where(fresh, 0, buf.age + 1).astype(jnp.int32),
+        buf.bound)

@@ -59,7 +59,8 @@ def test_registry_covers_full_matrix_on_both_meshes():
     expected = (len(sweep.POD_ATTACKS) * len(sweep.POD_SCHEDULES)
                 * len(sweep.POD_AGGREGATORS) * len(sweep.POD_MESHES)
                 + len(sweep.BIG_MODEL_SCENARIOS)
-                + len(sweep.COMPRESSION_SCENARIOS))
+                + len(sweep.COMPRESSION_SCENARIOS)
+                + len(sweep.STALE_SCENARIOS))
     assert len(names) == expected
     for mesh in sweep.POD_MESHES:
         for agg in sweep.POD_AGGREGATORS:
@@ -372,8 +373,9 @@ def test_checked_in_record_covers_registry():
     assert set(sweep.POD_MESHES) <= recorded_meshes, recorded_meshes
     for name, entry in scenarios.items():
         assert entry["collective_bytes_per_device"] > 0
-        expect = "report_wire" if sweep.get_pod_scenario(name).wire \
-            else "train_step"
+        ps = sweep.get_pod_scenario(name)
+        expect = ("report_wire" if ps.wire
+                  else "stale_report" if ps.stale else "train_step")
         assert entry["step"] == expect, name
 
 

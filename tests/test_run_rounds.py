@@ -42,8 +42,8 @@ def test_scan_reproduces_loop_exactly():
 
     run = make_run_rounds(regression.squared_loss, opt, rc)
     theta0 = jnp.zeros((d,))
-    theta_s, _, _, metrics = run(theta0, opt.init(theta0), batches,
-                                 base_key, num_rounds=rounds)
+    theta_s, _, _, _, metrics = run(theta0, opt.init(theta0), batches,
+                                    base_key, num_rounds=rounds)
 
     np.testing.assert_array_equal(np.asarray(theta), np.asarray(theta_s))
     for k in ("loss_mean", "loss_median", "agg_grad_norm"):
@@ -116,18 +116,18 @@ def test_per_round_batches_mode():
 
     run = make_run_rounds(regression.squared_loss, opt, rc)
     theta0 = jnp.zeros((d,))
-    theta, _, _, metrics = run(theta0, opt.init(theta0), stacked, key,
-                               per_round_batches=True)
+    theta, _, _, _, metrics = run(theta0, opt.init(theta0), stacked, key,
+                                  per_round_batches=True)
     assert metrics["loss_median"].shape == (rounds,)
     assert bool(jnp.all(jnp.isfinite(theta)))
 
     # chunked (3 + 3) with start_round continuation == one 6-round call
     first3 = jax.tree.map(lambda x: x[:3], stacked)
     last3 = jax.tree.map(lambda x: x[3:], stacked)
-    th, st, astate, _ = run(theta0, opt.init(theta0), first3, key,
-                            per_round_batches=True)
-    th, _, _, _ = run(th, st, last3, key, start_round=3,
-                      attack_state=astate, per_round_batches=True)
+    th, st, astate, _, _ = run(theta0, opt.init(theta0), first3, key,
+                               per_round_batches=True)
+    th, _, _, _, _ = run(th, st, last3, key, start_round=3,
+                         attack_state=astate, per_round_batches=True)
     np.testing.assert_array_equal(np.asarray(theta), np.asarray(th))
 
 
@@ -144,8 +144,8 @@ def test_stealth_schedule_state_carries_through_scan():
     opt = optim.sgd(0.5)
     run = make_run_rounds(regression.squared_loss, opt, rc, schedule=sched)
     theta0 = jnp.zeros((d,))
-    _, _, astate, metrics = run(theta0, opt.init(theta0), batches,
-                                jax.random.PRNGKey(5), num_rounds=30)
+    _, _, astate, _, metrics = run(theta0, opt.init(theta0), batches,
+                                   jax.random.PRNGKey(5), num_rounds=30)
     counts = np.asarray(metrics["byz_count"])
     assert counts[0] == 0, "must start honest"
     assert counts[-1] == q, "must end striking"
@@ -167,8 +167,8 @@ def test_ramp_up_schedule_monotone_q():
     opt = optim.sgd(0.5)
     run = make_run_rounds(regression.squared_loss, opt, rc, schedule=sched)
     theta0 = jnp.zeros((d,))
-    _, _, _, metrics = run(theta0, opt.init(theta0), batches,
-                           jax.random.PRNGKey(6), num_rounds=20)
+    _, _, _, _, metrics = run(theta0, opt.init(theta0), batches,
+                              jax.random.PRNGKey(6), num_rounds=20)
     counts = np.asarray(metrics["byz_count"])
     assert np.all(np.diff(counts) >= 0)
     assert counts[0] == 1 and counts[-1] == q

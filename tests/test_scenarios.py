@@ -133,3 +133,32 @@ def test_compressed_scenario_resume_replay_bit_exact(tmp_path):
     trace = sim.replay_scenario(name, d, ckpt_every=7)
     assert goldens.trace_bytes(trace) == straight
     assert goldens.compare_traces(trace, goldens.load_golden(name)) == []
+
+
+def test_stale_golden_carries_staleness_keys_conditionally():
+    sc = get_scenario("linreg/gmom/sign_flip/rotating/stale")
+    assert sc.golden and sc.arrival == "straggler_rotating"
+    assert sc.staleness_bound == 2
+    tr = goldens.load_golden(sc.name)
+    assert tr["arrival"] == "straggler_rotating"
+    assert tr["staleness_bound"] == 2
+    assert len(tr["stale_count"]) == sc.rounds
+    assert any(c > 0 for c in tr["stale_count"])
+    # synchronous traces must NOT grow the keys (adding them
+    # unconditionally would invalidate every pre-existing golden)
+    sync = goldens.load_golden("linreg/gmom/sign_flip/rotating")
+    assert "arrival" not in sync and "stale_count" not in sync
+
+
+def test_stale_scenario_resume_replay_bit_exact(tmp_path):
+    """Interrupted-then-resumed checkpointed replay of the staleness
+    scenario is byte-identical to the single scan AND reproduces the
+    checked-in golden: the buffer rides TrainState (ages + buffered rows
+    restored exactly), so a mid-decay interrupt loses nothing."""
+    name = "linreg/gmom/sign_flip/rotating/stale"
+    straight = goldens.trace_bytes(sim.run_scenario(name))
+    d = str(tmp_path / "ckpt")
+    sim.replay_scenario(name, d, rounds=19, ckpt_every=7)    # "crash" mid-run
+    trace = sim.replay_scenario(name, d, ckpt_every=7)
+    assert goldens.trace_bytes(trace) == straight
+    assert goldens.compare_traces(trace, goldens.load_golden(name)) == []

@@ -1,0 +1,309 @@
+"""Bounded-staleness aggregation (core/staleness.py) — the docs/ASYNC.md
+semantics contract, pinned:
+
+* the all-fresh invariant: ``all_sync`` is BIT-identical to the synchronous
+  trainer at any τ (a fresh row's weight is exactly 1.0, so the staleness
+  scaling is an exact identity), and the disabled default (τ=0 +
+  ``all_sync``) carries the empty pytree — same lowering, byte for byte;
+* buffer mechanics: the merge rule keeps exactly the non-fresh rows, ages
+  follow the exact integer recurrence (0 on arrival, +1 otherwise), and
+  rows past the bound get weight exactly 0 (the hard drop);
+* the PR 2 resume contract extended: a run interrupted with a NON-EMPTY
+  staleness buffer (workers mid-decay at the boundary) resumes
+  bit-identically to the uninterrupted run.
+
+``hypothesis`` is optional, per the repo convention (tier-1 does not ship
+it): properties fall back to a deterministic seed sweep.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import (RobustConfig, byzantine, init_train_state,
+                        make_run_rounds, restore_train_state,
+                        save_train_state, staleness)
+from repro.core.staleness import (apply_staleness, init_buffer,
+                                  merge_reports, staleness_weights)
+from repro.core.train_state import advance, history_rows
+from repro.data import regression
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+FALLBACK_SEEDS = list(range(5))
+
+
+def _random_case(seed: int):
+    """(buffer, reported, fresh) with random shapes/ages for the
+    merge/weight properties."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(2, 9))
+    d = int(rng.integers(1, 13))
+    bound = int(rng.integers(0, 5))
+    params = {"w": np.zeros((d,), np.float32),
+              "b": {"x": np.zeros((3,), np.float32)}}
+    buf = init_buffer(params, m, bound)
+    # age the buffer into an arbitrary reachable state
+    buf = buf._replace(
+        age=jnp.asarray(rng.integers(0, bound + 3, size=(m,)), jnp.int32),
+        grads=jax.tree.map(
+            lambda l: jnp.asarray(
+                rng.normal(size=(m,) + l.shape), jnp.float32), params))
+    reported = jax.tree.map(
+        lambda l: jnp.asarray(rng.normal(size=l.shape), jnp.float32),
+        buf.grads)
+    fresh = jnp.asarray(rng.integers(0, 2, size=(m,)).astype(bool))
+    return buf, reported, fresh
+
+
+def property_test(check):
+    """Run under hypothesis when available, else over deterministic seeds."""
+    if HAVE_HYPOTHESIS:
+        wrapped = given(st.integers(0, 2**31 - 1))(check)
+        return settings(max_examples=25, deadline=None)(wrapped)
+    return pytest.mark.parametrize("seed", FALLBACK_SEEDS)(check)
+
+
+# --------------------------------------------------------------------------
+# buffer mechanics: merge / age / drop
+
+
+@property_test
+def test_merge_selects_rows_and_ages_exactly(seed):
+    buf, reported, fresh = _random_case(seed)
+    merged, new_buf = merge_reports(buf, reported, fresh)
+    fresh_np = np.asarray(fresh)
+    for got, rep, old in zip(jax.tree.leaves(merged),
+                             jax.tree.leaves(reported),
+                             jax.tree.leaves(buf.grads)):
+        want = np.where(
+            fresh_np.reshape((-1,) + (1,) * (np.asarray(rep).ndim - 1)),
+            np.asarray(rep), np.asarray(old))
+        np.testing.assert_array_equal(np.asarray(got), want)
+    # the exact integer recurrence: 0 on arrival, +1 otherwise
+    want_age = np.where(fresh_np, 0, np.asarray(buf.age) + 1)
+    np.testing.assert_array_equal(np.asarray(new_buf.age), want_age)
+    assert new_buf.age.dtype == jnp.int32
+    # merged rows are what the buffer now holds (the buffer IS the merge)
+    for got, kept in zip(jax.tree.leaves(merged),
+                         jax.tree.leaves(new_buf.grads)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(kept))
+
+
+@property_test
+def test_weights_discount_and_hard_drop(seed):
+    buf, _, _ = _random_case(seed)
+    discount = 0.7
+    w = np.asarray(staleness_weights(buf.age, buf.bound, discount=discount))
+    age = np.asarray(buf.age)
+    bound = int(buf.bound)
+    assert np.all(w[age == 0] == np.float32(1.0))        # exactly 1.0 fresh
+    assert np.all(w[age > bound] == 0.0)                 # hard drop
+    mid = (age > 0) & (age <= bound)
+    np.testing.assert_allclose(
+        w[mid], np.float32(discount) ** age[mid].astype(np.float32),
+        rtol=1e-6)
+
+
+@property_test
+def test_all_fresh_scaling_is_a_bit_exact_identity(seed):
+    buf, reported, _ = _random_case(seed)
+    fresh = jnp.ones_like(buf.age, dtype=bool)
+    merged, new_buf = merge_reports(buf, reported, fresh)
+    scaled = apply_staleness(merged, new_buf.age, new_buf.bound,
+                             discount=0.7)
+    for a, b in zip(jax.tree.leaves(scaled), jax.tree.leaves(merged)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dropped_rows_contribute_zero():
+    params = {"w": np.zeros((4,), np.float32)}
+    buf = init_buffer(params, 3, 1)
+    buf = buf._replace(age=jnp.asarray([0, 1, 2], jnp.int32),
+                       grads={"w": jnp.ones((3, 4), jnp.float32)})
+    scaled = apply_staleness(buf.grads, buf.age, buf.bound, discount=0.5)
+    rows = np.asarray(scaled["w"])
+    assert np.all(rows[2] == 0.0), "age > bound must zero the row"
+    # normalization: total mass stays m x weighted mean
+    w = np.array([1.0, 0.5, 0.0], np.float32)
+    np.testing.assert_allclose(rows[0], 3 * w[0] / w.sum(), rtol=1e-6)
+    np.testing.assert_allclose(rows[1], 3 * w[1] / w.sum(), rtol=1e-6)
+
+
+def test_init_buffer_starts_beyond_the_bound():
+    """Workers that have never reported must be hard-dropped, not counted
+    as age-0 phantom zeros."""
+    buf = init_buffer({"w": np.zeros((2,), np.float32)}, 4, 2)
+    assert buf.age.dtype == jnp.int32
+    assert np.all(np.asarray(buf.age) > int(buf.bound))
+    w = np.asarray(staleness_weights(buf.age, buf.bound, discount=0.7))
+    assert np.all(w == 0.0)
+
+
+def test_arrival_registry_round_trips():
+    names = staleness.available_arrivals()
+    assert set(names) == {"all_sync", "straggler_fixed",
+                          "straggler_rotating", "partition",
+                          "byzantine_max_stale"}
+    for name, description in staleness.describe():
+        assert description.strip(), name
+        arr = staleness.make_arrival(name, num_workers=6, staleness_bound=2)
+        fresh = arr.arrive(jax.random.PRNGKey(0), 3,
+                           jnp.zeros((6,), bool))
+        assert fresh.shape == (6,) and fresh.dtype == jnp.bool_
+
+
+# --------------------------------------------------------------------------
+# the all-fresh invariant on the real trainer
+
+
+def _setup(*, arrival=None, d=8, N=1280, m=8, q=2, seed=3):
+    ds = regression.generate(jax.random.PRNGKey(seed), dim=d,
+                             total_samples=N, num_workers=m)
+    rc = RobustConfig(num_workers=m, num_byzantine=q, num_batches=4,
+                      attack="sign_flip", aggregator="gmom")
+    schedule = byzantine.make_schedule("rotating", num_workers=m,
+                                       num_byzantine=q, attack="sign_flip")
+    opt = optim.adamw(1e-2)
+    run = make_run_rounds(regression.squared_loss, opt, rc,
+                          schedule=schedule, arrival=arrival)
+    theta0 = jnp.zeros((d,))
+    state0 = init_train_state(theta0, opt.init(theta0),
+                              jax.random.PRNGKey(11), schedule=schedule,
+                              arrival=arrival)
+    return run, state0, regression.worker_batches(ds), opt, schedule
+
+
+def _rows_sans_stale(rows):
+    """History rows with the staleness-only metric removed: an enabled
+    arrival adds ``stale_count`` to the trace by design (conditional keys
+    keep disabled goldens byte-stable), so bit-equality against the sync
+    trainer is asserted on the shared metrics."""
+    return [{k: v for k, v in r.items() if k != "stale_count"}
+            for r in rows]
+
+
+def _tree_equal(a, b, msg=""):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb, f"{msg}: structure {ta} vs {tb}"
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+@pytest.mark.parametrize("schedule_name",
+                         ["static", "rotating", "stealth_then_strike"])
+def test_all_sync_tau0_bit_identical_to_sync_trainer(schedule_name):
+    """τ=0 + all_sync — the default — must not change a single bit of the
+    synchronous trainer, for stateless and stateful attack schedules."""
+    m, q, d = 8, 2, 8
+    ds = regression.generate(jax.random.PRNGKey(3), dim=d,
+                             total_samples=1280, num_workers=m)
+    rc = RobustConfig(num_workers=m, num_byzantine=q, num_batches=4,
+                      attack="sign_flip", aggregator="gmom")
+    schedule = byzantine.make_schedule(schedule_name, num_workers=m,
+                                       num_byzantine=q, attack="sign_flip")
+    opt = optim.adamw(1e-2)
+    theta0 = jnp.zeros((d,))
+    batches = regression.worker_batches(ds)
+
+    arrival = staleness.make_arrival("all_sync", num_workers=m,
+                                     staleness_bound=0)
+    run_sync = make_run_rounds(regression.squared_loss, opt, rc,
+                               schedule=schedule)
+    run_stale = make_run_rounds(regression.squared_loss, opt, rc,
+                                schedule=schedule, arrival=arrival)
+    s_sync = init_train_state(theta0, opt.init(theta0),
+                              jax.random.PRNGKey(11), schedule=schedule)
+    s_stale = init_train_state(theta0, opt.init(theta0),
+                               jax.random.PRNGKey(11), schedule=schedule,
+                               arrival=arrival)
+
+    out_sync, _ = advance(run_sync, s_sync, batches, num_rounds=12)
+    out_stale, _ = advance(run_stale, s_stale, batches, num_rounds=12)
+    _tree_equal(out_stale.params, out_sync.params, "params")
+    _tree_equal(out_stale.opt_state, out_sync.opt_state, "opt_state")
+    assert _rows_sans_stale(history_rows(out_stale.history)) == \
+        history_rows(out_sync.history)
+
+
+def test_all_sync_any_tau_bit_identical_to_sync_trainer():
+    """Stronger than τ=0: with every worker fresh the weights are exactly
+    1.0, so even an ACTIVE buffer (τ=3, real merge/scale in the scan body)
+    reproduces the sync trajectory bit for bit."""
+    arrival = staleness.make_arrival("all_sync", num_workers=8,
+                                     staleness_bound=3)
+    run_a, s_a, batches, _, _ = _setup(arrival=arrival)
+    run_b, s_b, _, _, _ = _setup(arrival=None)
+    out_a, _ = advance(run_a, s_a, batches, num_rounds=12)
+    out_b, _ = advance(run_b, s_b, batches, num_rounds=12)
+    _tree_equal(out_a.params, out_b.params, "params")
+    _tree_equal(out_a.opt_state, out_b.opt_state, "opt_state")
+    assert _rows_sans_stale(history_rows(out_a.history)) == \
+        history_rows(out_b.history)
+    # and the buffer really was live: ages all 0 after an all-fresh run
+    assert np.all(np.asarray(out_a.stale_buffer.age) == 0)
+
+
+def test_disabled_arrival_keeps_empty_carry():
+    run, state0, batches, _, _ = _setup(arrival=None)
+    out, _ = advance(run, state0, batches, num_rounds=3)
+    assert state0.stale_buffer == ()
+    assert out.stale_buffer == ()
+
+
+def test_straggler_run_is_finite_and_counts_stale_workers():
+    arrival = staleness.make_arrival("straggler_rotating", num_workers=8,
+                                     staleness_bound=2)
+    run, state0, batches, _, _ = _setup(arrival=arrival)
+    out, metrics = advance(run, state0, batches, num_rounds=10)
+    assert bool(jnp.all(jnp.isfinite(out.params)))
+    counts = np.asarray(metrics["stale_count"])
+    assert counts.shape == (10,)
+    assert np.all(counts >= 0) and np.any(counts > 0)
+    ages = np.asarray(out.stale_buffer.age)
+    assert ages.dtype == np.int32 and np.all(ages >= 0)
+
+
+# --------------------------------------------------------------------------
+# resume with a non-empty buffer
+
+
+def test_resume_with_nonempty_buffer_is_bit_identical(tmp_path):
+    """Interrupt mid-decay — some workers stale at the checkpoint boundary,
+    the buffer holding real gradients — and the resumed run must match the
+    straight run bit for bit (params, opt moments, ages, buffered rows)."""
+    m = 8
+    arrival = staleness.make_arrival("straggler_fixed", num_workers=m,
+                                     staleness_bound=2)
+    run, state0, batches, opt, schedule = _setup(arrival=arrival, m=m)
+    # k = 8: round index 7 at the boundary, 7 % period != 0, so the
+    # straggler rows are buffered mid-decay exactly when we interrupt
+    rounds, k = 14, 8
+
+    straight, _ = advance(run, state0, batches, num_rounds=rounds)
+
+    mid, _ = advance(run, state0, batches, num_rounds=k)
+    assert np.any(np.asarray(mid.stale_buffer.age) > 0), \
+        "boundary must catch workers mid-decay or the test is vacuous"
+    save_train_state(str(tmp_path), mid)
+    del mid                                   # the "crash"
+
+    theta0 = jnp.zeros_like(state0.params)
+    restored = restore_train_state(str(tmp_path), k, theta0,
+                                   opt.init(theta0), schedule=schedule,
+                                   arrival=arrival)
+    assert int(restored.round_index) == k
+    resumed, _ = advance(run, restored, batches, num_rounds=rounds - k)
+
+    _tree_equal(resumed.params, straight.params, "params")
+    _tree_equal(resumed.opt_state, straight.opt_state, "opt_state")
+    _tree_equal(resumed.stale_buffer, straight.stale_buffer, "stale_buffer")
+    assert history_rows(resumed.history) == history_rows(straight.history)

@@ -113,6 +113,31 @@ def test_rv106_good_clean():
     assert lint("rv106_good.py") == []
 
 
+def test_rv107_bad_float_ages():
+    fs = lint("rv107_bad.py")
+    assert [f.rule for f in fs] == ["RV107"] * 2
+    assert [f.line for f in fs] == [17, 21]
+    assert all("integer" in f.message for f in fs)
+
+
+def test_rv107_good_clean():
+    assert lint("rv107_good.py") == []
+
+
+def test_rv107_flags_buffer_not_train_state_resident():
+    """The second leg: constructing a StalenessBuffer while TrainState has
+    no stale_buffer field is the lost-carry bug class for the async path."""
+    from repro.verify.ast_rules import rv107
+    from repro.verify.rules import SourceContext
+    with open(fx("rv107_good.py")) as f:
+        ctx = SourceContext(fx("rv107_good.py"), f.read())
+    fs = rv107(ctx, fields=("params", "opt_state", "attack_state"))
+    assert any("stale_buffer" in f.message and f.rule == "RV107"
+               for f in fs)
+    # with the real TrainState (which has the field) the same file is clean
+    assert rv107(ctx) == []
+
+
 # --------------------------------------------------------------------------
 # escape hatch: suppression drops the finding, but only WITH justification
 
@@ -134,7 +159,7 @@ def test_ignore_unknown_rule_id_raises_rv100_and_keeps_finding():
 def test_every_rule_documented_in_catalog():
     from repro.verify.rules import RULES
     for rid in ("RV100", "RV101", "RV102", "RV103", "RV104", "RV105",
-                "RV106", "RV201", "RV202", "RV203", "RV204"):
+                "RV106", "RV107", "RV201", "RV202", "RV203", "RV204"):
         assert rid in RULES
         assert RULES[rid].motivation
 
@@ -144,6 +169,7 @@ def test_train_state_fields_parse():
     fields = train_state_fields()
     assert "params" in fields and "opt_state" in fields
     assert "attack_state" in fields and "base_key" in fields
+    assert "stale_buffer" in fields
 
 
 # --------------------------------------------------------------------------
