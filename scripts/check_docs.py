@@ -15,9 +15,13 @@ Fails (non-zero exit / raised AssertionError from pytest) when:
   missing from the checked-in benchmarks/BENCH_pod_sweeps.json, or a
   sweep-matrix axis value (attack/schedule/aggregator/mesh) is missing
   from the docs/BENCHMARKS.md sweep tables;
-* a repro.verify rule (RV1xx/RV2xx) is missing from the
+* a repro.verify rule (RV1xx/RV2xx/RV3xx) is missing from the
   docs/STATIC_ANALYSIS.md catalog, or the catalog documents a rule ID
   that is no longer registered (stale docs fail too);
+* a Layer-C taint surface is undocumented: a declared (or declarable)
+  sanitization kind or an adversary source tag missing from the
+  docs/STATIC_ANALYSIS.md tables, or a PAPER_MAP that no longer anchors
+  the --taint gate to the paper's S1.3 dependency argument;
 * a registered arrival schedule (repro.core.staleness) is missing from
   the docs/ASYNC.md schedule table or the PAPER_MAP synchrony rows;
 * a prose doc references a repo file path that does not exist, or points
@@ -104,6 +108,7 @@ def collect_problems() -> list[str]:
     problems += _pod_sweep_problems(paper_map)
     problems += _codec_problems(paper_map)
     problems += _verify_rules_problems(paper_map)
+    problems += _taint_doc_problems(paper_map)
     problems += _arrival_problems(paper_map)
     problems += _dead_path_problems()
     return problems
@@ -238,6 +243,45 @@ def _verify_rules_problems(paper_map: str) -> list[str]:
     return problems
 
 
+def _taint_doc_problems(paper_map: str) -> list[str]:
+    """The Layer-C contract: every sanitization kind the influence engine
+    can discover (= every value ``register(sanitization_point=...)``
+    accepts) and every adversary source tag must be documented in the
+    docs/STATIC_ANALYSIS.md tables, every *declared* point must be one of
+    them, and PAPER_MAP must anchor the taint gate to the paper's S1.3
+    arbitrary-dependency argument."""
+    from repro.core import aggregators
+    from repro.verify.influence import SANITIZER_KINDS
+
+    problems: list[str] = []
+    doc = _read(os.path.join("docs", "STATIC_ANALYSIS.md"))
+
+    for kind in SANITIZER_KINDS:
+        if f"`{kind}`" not in doc:
+            problems.append(
+                f"sanitization kind {kind!r} is recognized by the Layer-C "
+                "influence engine but missing from the "
+                "docs/STATIC_ANALYSIS.md bounded-op table")
+    for source in ("report", "age", "attack_state"):
+        if f"`{source}`" not in doc:
+            problems.append(
+                f"adversary source tag {source!r} is missing from the "
+                "docs/STATIC_ANALYSIS.md taint-sources table")
+    for name in aggregators.available():
+        point = aggregators.get_aggregator(name).sanitization_point
+        if point is not None and point not in SANITIZER_KINDS:
+            problems.append(
+                f"aggregator {name!r} declares sanitization_point "
+                f"{point!r}, which the influence engine cannot discover "
+                "(not in SANITIZER_KINDS)")
+    if "--taint" not in paper_map:
+        problems.append(
+            "docs/PAPER_MAP.md does not anchor the Layer-C taint gate "
+            "(`python -m repro.verify --strict --taint`) to the S1.3 "
+            "arbitrary-dependency rows")
+    return problems
+
+
 def _pod_sweep_problems(paper_map: str) -> list[str]:
     """The pod-sweep contract: registry ⊆ checked-in record ∧ docs tables."""
     from repro.sim import sweep
@@ -316,8 +360,9 @@ def main() -> int:
         return 1
     print("check_docs: ok — registries, PAPER_MAP, README table, "
           "BENCH_round_kernel.json, the pod-sweep record/docs, the "
-          "repro.verify rule catalog, the ASYNC.md arrival table, and "
-          "every doc-referenced file path are consistent")
+          "repro.verify rule catalog, the Layer-C taint tables, the "
+          "ASYNC.md arrival table, and every doc-referenced file path "
+          "are consistent")
     return 0
 
 

@@ -110,6 +110,17 @@ _REGISTRY: dict[str, "Aggregator"] = {}
 #                        partial gram), selection itself is shard-local.
 SHARD_CONTRACTS = ("coordinate_wise", "norm_based", "whole_gradient")
 
+# The bounded-influence op families the Layer-C taint analysis
+# (repro.verify.taint / docs/STATIC_ANALYSIS.md) recognizes on a
+# report→output dataflow.  A rule that claims robustness declares WHICH
+# family sanitizes the reports (its ``sanitization_point``); rules with no
+# bounded path (the KNOWN-UNSOUND set) declare ``None``.  The analysis
+# never reads the declaration while classifying — it rediscovers the
+# family from the traced jaxpr and then *compares* (RV303), so a stale or
+# aspirational declaration is itself a finding.
+SANITIZATION_POINTS = ("clip", "order_stat", "rank_select", "sign_vote",
+                       "weiszfeld")
+
 
 @dataclasses.dataclass(frozen=True)
 class Aggregator:
@@ -150,6 +161,15 @@ class Aggregator:
     (``sign_sgd_majority`` votes on packed sign bits; ``int8_gmom``
     dequantizes in-rule).  ``None`` means the rule only ever sees float
     gradients — any configured codec is decoded before dispatch.
+
+    ``sanitization_point`` names the bounded-influence op family (one of
+    ``SANITIZATION_POINTS``) through which every worker report must pass
+    before reaching the rule's output — the channel PAPER.md §1.3 / Thm 3
+    requires to be the ONLY one.  ``None`` = the rule admits unbounded
+    per-worker influence (the KNOWN-UNSOUND set).  The Layer-C taint
+    analysis (``repro.verify.taint``) verifies the declaration against the
+    traced dataflow: RV301 fires when a raw report bypasses it, RV303
+    when the declared family does not match the discovered one.
     """
     name: str
     fn: AggregatorFn
@@ -160,6 +180,7 @@ class Aggregator:
     needs_shard_spec: bool = False
     shard_contract: str = "coordinate_wise"
     native_codec: str | None = None
+    sanitization_point: str | None = None
 
     def __call__(self, stacked_grads, **kw):
         return self.fn(stacked_grads, **kw)
@@ -169,17 +190,25 @@ def register(name: str, description: str = "", *,
              needs_num_byzantine: bool = False, needs_key: bool = False,
              needs_grouping: bool = False, needs_shard_spec: bool = False,
              shard_contract: str = "coordinate_wise",
-             native_codec: str | None = None):
+             native_codec: str | None = None,
+             sanitization_point: str | None = None):
     if shard_contract not in SHARD_CONTRACTS:
         raise ValueError(
             f"aggregator {name!r} declares unknown shard_contract "
             f"{shard_contract!r}; must be one of {SHARD_CONTRACTS}")
+    if sanitization_point is not None and \
+            sanitization_point not in SANITIZATION_POINTS:
+        raise ValueError(
+            f"aggregator {name!r} declares unknown sanitization_point "
+            f"{sanitization_point!r}; must be None or one of "
+            f"{SANITIZATION_POINTS}")
     def deco(fn):
         _REGISTRY[name] = Aggregator(
             name=name, fn=fn, description=description,
             needs_num_byzantine=needs_num_byzantine, needs_key=needs_key,
             needs_grouping=needs_grouping, needs_shard_spec=needs_shard_spec,
-            shard_contract=shard_contract, native_codec=native_codec)
+            shard_contract=shard_contract, native_codec=native_codec,
+            sanitization_point=sanitization_point)
         return fn
     return deco
 
@@ -357,7 +386,8 @@ def _total_dim(stacked) -> int:
 @register("gmom", "geometric median of means — the paper's Algorithm 2 "
           "(fused Pallas round kernel on TPU, jnp reference elsewhere)",
           needs_num_byzantine=True, needs_grouping=True,
-          needs_shard_spec=True, shard_contract="norm_based")
+          needs_shard_spec=True, shard_contract="norm_based",
+          sanitization_point="weiszfeld")
 def gmom_aggregator(stacked_grads, *, num_batches: int | None = None,
                     num_byzantine: int = 0, epsilon: float = 0.1,
                     grouping_scheme: str = "contiguous",
@@ -408,7 +438,8 @@ def gmom_aggregator(stacked_grads, *, num_batches: int | None = None,
 
 @register("geomed", "geometric median of the raw worker gradients — the "
           "k = m special case of GMoM (paper §2.1)",
-          needs_shard_spec=True, shard_contract="norm_based")
+          needs_shard_spec=True, shard_contract="norm_based",
+          sanitization_point="weiszfeld")
 def geomed_aggregator(stacked_grads, *, max_iters: int = 64,
                       tol: float = 1e-8, shard_spec=None, **_kw):
     """GMoM with every worker its own batch (k = m, paper §2.1): maximal
@@ -419,7 +450,8 @@ def geomed_aggregator(stacked_grads, *, max_iters: int = 64,
 
 @register("coordinate_median", "coordinate-wise median — the marginal-"
           "median baseline of Yin et al. '18",
-          shard_contract="coordinate_wise")
+          shard_contract="coordinate_wise",
+          sanitization_point="order_stat")
 def coordinate_median_aggregator(stacked_grads, **_kw):
     """Per-coordinate median across workers (the marginal median): robust
     per coordinate, but ignores cross-coordinate structure — the
@@ -429,7 +461,8 @@ def coordinate_median_aggregator(stacked_grads, **_kw):
 
 @register("trimmed_mean", "coordinate-wise beta-trimmed mean "
           "[Yin et al. '18] — related-work baseline",
-          needs_num_byzantine=True, shard_contract="coordinate_wise")
+          needs_num_byzantine=True, shard_contract="coordinate_wise",
+          sanitization_point="order_stat")
 def trimmed_mean_aggregator(stacked_grads, *, trim_fraction: float = 0.1,
                             num_byzantine: int | None = None, **_kw):
     """Coordinate-wise mean after discarding the t largest and t smallest
@@ -452,7 +485,8 @@ def trimmed_mean_aggregator(stacked_grads, *, trim_fraction: float = 0.1,
           "related work; picks one whole gradient via the shard-local "
           "‖a‖²+‖b‖²−2a·b gram expansion (no flattened f32 copies)",
           needs_num_byzantine=True, needs_shard_spec=True,
-          shard_contract="whole_gradient")
+          shard_contract="whole_gradient",
+          sanitization_point="rank_select")
 def krum_aggregator(stacked_grads, *, num_byzantine: int = 0,
                     shard_spec=None, **_kw):
     """Krum (Blanchard et al. '17): return the single worker gradient with
@@ -640,7 +674,8 @@ def norm_select_aggregator(stacked_grads, *, num_byzantine: int = 0,
           "sound combined rule: per-coordinate order statistics are immune "
           "to the small-norm attacks that break norm_select",
           needs_num_byzantine=True, needs_grouping=True,
-          shard_contract="coordinate_wise")
+          shard_contract="coordinate_wise",
+          sanitization_point="order_stat")
 def coord_median_aggregator(stacked_grads, *, num_batches: int | None = None,
                             num_byzantine: int = 0, epsilon: float = 0.1,
                             grouping_scheme: str = "contiguous", **_kw):
@@ -679,7 +714,8 @@ def coord_median_aggregator(stacked_grads, *, num_batches: int | None = None,
           "[Yin et al. '18] — sound combined rule; trims the q largest AND "
           "q smallest per coordinate, unlike norm_select's one-sided cut",
           needs_num_byzantine=True, needs_grouping=True,
-          shard_contract="coordinate_wise")
+          shard_contract="coordinate_wise",
+          sanitization_point="order_stat")
 def coord_trimmed_mean_aggregator(stacked_grads, *,
                                   num_batches: int | None = None,
                                   num_byzantine: int = 0,
@@ -729,7 +765,8 @@ def coord_trimmed_mean_aggregator(stacked_grads, *,
           "the huge AND the adversarially-small outliers), then GMoM on "
           "the surviving reports",
           needs_num_byzantine=True, needs_grouping=True,
-          needs_shard_spec=True, shard_contract="norm_based")
+          needs_shard_spec=True, shard_contract="norm_based",
+          sanitization_point="weiszfeld")
 def norm_filter_gmom_aggregator(stacked_grads, *,
                                 num_batches: int | None = None,
                                 num_byzantine: int = 0, epsilon: float = 0.1,
@@ -821,7 +858,8 @@ def norm_filter_gmom_aggregator(stacked_grads, *,
           "GMoM applied independently per parameter tensor — beyond-paper "
           "blockwise variant (DESIGN.md §3)",
           needs_num_byzantine=True, needs_grouping=True,
-          needs_shard_spec=True, shard_contract="norm_based")
+          needs_shard_spec=True, shard_contract="norm_based",
+          sanitization_point="weiszfeld")
 def gmom_per_leaf_aggregator(stacked_grads, *, num_batches: int | None = None,
                              num_byzantine: int = 0, epsilon: float = 0.1,
                              grouping_scheme: str = "contiguous",
@@ -878,7 +916,8 @@ def gmom_per_leaf_aggregator(stacked_grads, *, num_batches: int | None = None,
           "[Jin et al. '19] — consumes the packed `sign` wire natively "
           "(votes on uint8 words, never reconstructs float gradients); "
           "shard-local with zero cross-shard collectives",
-          shard_contract="coordinate_wise", native_codec="sign")
+          shard_contract="coordinate_wise", native_codec="sign",
+          sanitization_point="sign_vote")
 def sign_sgd_majority_aggregator(stacked_grads, *, like=None, **_kw):
     """signSGD with majority vote (Jin et al. '19, arXiv 1902.10336):
     per coordinate, output −1 if a strict majority of the m reported sign
@@ -904,7 +943,8 @@ def sign_sgd_majority_aggregator(stacked_grads, *, like=None, **_kw):
           "the paper's Algorithm 2 guarantees on the dequantized reports",
           needs_num_byzantine=True, needs_grouping=True,
           needs_shard_spec=True, shard_contract="norm_based",
-          native_codec="int8_stochastic")
+          native_codec="int8_stochastic",
+          sanitization_point="weiszfeld")
 def int8_gmom_aggregator(stacked_grads, *, like=None,
                          num_batches: int | None = None,
                          num_byzantine: int = 0, epsilon: float = 0.1,

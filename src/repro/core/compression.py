@@ -309,6 +309,11 @@ register("sign",
          encode=_sign_encode, decode=_sign_decode,
          bits_per_coordinate=1.0)
 
+# Layer C note (repro.verify.taint): a codec's per-worker scales are
+# derived FROM the reports inside the traced encode, so taint analysis
+# marks them report-controlled by plain dataflow — a scale applied to
+# anything but that same worker's row, or re-applied after aggregation,
+# surfaces as RV301 without any codec-specific rule.
 register("int8_stochastic",
          "8-bit stochastic quantization: per-(worker, leaf) amax/127 scale "
          "+ PRNG-keyed stochastic rounding — unbiased, worst-case "

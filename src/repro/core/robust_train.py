@@ -130,6 +130,14 @@ def aggregate_reported(reported_grads, cfg: RobustConfig, *, key,
     their normalized ``discount**age`` weights (exactly 1.0 when fresh,
     exactly 0.0 past the bound) BEFORE the wire codec sees them — the
     server weighs what it has, then encodes/aggregates as usual.
+
+    This function is the Layer C trust boundary: ``reported_grads`` is
+    ``report``-tainted (adversary-controlled end to end, including any
+    wire payloads and codec scales derived from it downstream), and the
+    RV301 invariant is that its influence exits this call only through
+    the aggregator's declared sanitization point — nothing here may mix a
+    report-derived value into the output after the rule runs (see
+    repro.verify.taint and docs/STATIC_ANALYSIS.md).
     """
     agg = aggregators.get_aggregator(cfg.aggregator)
     kwargs: dict[str, Any] = {}

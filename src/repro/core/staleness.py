@@ -45,6 +45,13 @@ class StalenessBuffer(NamedTuple):
     ``age`` is (m,) int32 — 0 means "reported this round"; ``bound`` is a
     0-d int32 array so the whole buffer is a pure array pytree (the
     TrainState serialization contract).
+
+    Layer C taint roots (repro.verify.taint): ``grads`` carries buffered
+    worker reports (``report``-tainted — adversary memory across rounds)
+    and ``age`` is adversary-controlled timing (``age``-tainted).  The
+    RV302 invariant: ages and the bound may never come to depend on
+    report *values* — cross-round coupling is timing and attack
+    scheduling only, per the γ^age discount contract of docs/ASYNC.md.
     """
     grads: Any
     age: jax.Array

@@ -1,10 +1,13 @@
-"""repro.verify — two-layer invariant checker.
+"""repro.verify — three-layer invariant checker.
 
 Layer A: AST lint of ``src/`` against the RV1xx rules (no jax import —
 safe anywhere).  Layer B: jaxpr/HLO contract analysis of every registered
 aggregator plus the static VMEM audit (RV2xx; needs an 8-device host
-mesh).  Run as ``python -m repro.verify``; catalog and policy in
-docs/STATIC_ANALYSIS.md.
+mesh).  Layer C: Byzantine taint/influence analysis — every worker-report
+input is marked adversary-controlled and propagated through the traced
+aggregators and the production round step; RV3xx fires when taint reaches
+TrainState without crossing a bounded-influence sanitizer.  Run as
+``python -m repro.verify``; catalog and policy in docs/STATIC_ANALYSIS.md.
 """
 
 from repro.verify.rules import (RULES, Finding, Rule,  # noqa: F401

@@ -468,8 +468,9 @@ def lint_file(path: str, src: str | None = None) -> list[Finding]:
                   key=lambda f: (f.line, f.col, f.rule))
 
 
-def lint_paths(paths: list[str]) -> list[Finding]:
-    """Lint every ``.py`` file under each path (files are linted as-is)."""
+def iter_python_files(paths: list[str]) -> list[str]:
+    """Every ``.py`` file under each path, sorted, ``__pycache__`` pruned
+    (shared by the linter and the ``--audit-ignores`` suppression audit)."""
     files: list[str] = []
     for p in paths:
         if os.path.isfile(p):
@@ -479,7 +480,12 @@ def lint_paths(paths: list[str]) -> list[Finding]:
             dirnames[:] = [d for d in dirnames if d != "__pycache__"]
             files += [os.path.join(dirpath, f) for f in sorted(filenames)
                       if f.endswith(".py")]
+    return sorted(set(files))
+
+
+def lint_paths(paths: list[str]) -> list[Finding]:
+    """Lint every ``.py`` file under each path (files are linted as-is)."""
     findings: list[Finding] = []
-    for f in sorted(set(files)):
+    for f in iter_python_files(paths):
         findings.extend(lint_file(f))
     return findings

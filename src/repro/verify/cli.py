@@ -1,15 +1,22 @@
-"""``python -m repro.verify`` — the two-layer invariant checker.
+"""``python -m repro.verify`` — the three-layer invariant checker.
 
 Layer A (default: lint all of ``src/``) is pure-AST and runs in
 milliseconds; Layer B traces/compiles every registered aggregator on a
 host-virtualized 8-device mesh and audits the Pallas round kernel's VMEM
-budget.  ``--strict`` turns findings into a non-zero exit (the tier-1 CI
-gate); without it the checker reports and exits 0 (the local
-triage mode).
+budget; Layer C (``--taint``) runs the Byzantine taint/influence
+analysis over the same traces plus the full production round step.
+``--strict`` turns findings into a non-zero exit (the tier-1 CI gate);
+without it the checker reports and exits 0 (the local triage mode).
 
-Exit codes: 0 clean (or non-strict), 1 findings under ``--strict``,
-2 internal error (the checker itself failed — never conflated with a
-finding).
+``--format sarif`` serializes the findings as SARIF 2.1.0 for GitHub
+code scanning (to ``--output`` or stdout, with progress rerouted to
+stderr).  ``--audit-ignores`` lists every ``# repro: ignore[...]``
+escape hatch in the tree with its justification and fails on rule IDs
+that no longer exist in the catalog.
+
+Exit codes: 0 clean (or non-strict), 1 findings under ``--strict``
+(or stale ignores under ``--audit-ignores``), 2 internal error (the
+checker itself failed — never conflated with a finding).
 """
 
 from __future__ import annotations
@@ -37,7 +44,7 @@ def run_layer_a(paths: list[str]) -> list[Finding]:
 
 def run_layer_b(*, aggregators_filter: list[str] | None,
                 num_shards_list: list[int], seed: int,
-                hlo_both_scales: bool) -> list[Finding]:
+                hlo_both_scales: bool, log=print) -> list[Finding]:
     from repro.launch.dryrun import force_host_device_count
     force_host_device_count(_LAYER_B_DEVICES)
 
@@ -55,8 +62,8 @@ def run_layer_b(*, aggregators_filter: list[str] | None,
     findings: list[Finding] = []
     for name in names:
         for num_shards in num_shards_list:
-            print(f"[verify] layer B: {name} × {num_shards} shards",
-                  flush=True)
+            log(f"[verify] layer B: {name} × {num_shards} shards",
+                flush=True)
             findings.extend(contracts.check_aggregator(
                 name, num_shards=num_shards, seed=seed,
                 hlo_both_scales=hlo_both_scales))
@@ -64,27 +71,81 @@ def run_layer_b(*, aggregators_filter: list[str] | None,
     return findings
 
 
+def run_layer_c(*, aggregators_filter: list[str] | None, full_matrix: bool,
+                num_shards: int, seed: int, log=print) -> list[Finding]:
+    from repro.launch.dryrun import force_host_device_count
+    force_host_device_count(_LAYER_B_DEVICES)
+
+    from repro.verify import taint
+    return taint.run_taint(aggregators_filter=aggregators_filter,
+                           full_matrix=full_matrix, num_shards=num_shards,
+                           seed=seed, log=log)
+
+
+def audit_ignores(paths: list[str], *, log=print) -> int:
+    """List every ``# repro: ignore[...]`` escape hatch with its
+    justification; exit non-zero when an ignore names a rule ID that no
+    longer exists in the catalog (a stale suppression is dead weight at
+    best and a masked regression at worst)."""
+    from repro.verify.ast_rules import iter_python_files
+    from repro.verify.rules import SourceContext
+
+    total, stale = 0, 0
+    for path in iter_python_files(paths):
+        try:
+            with open(path, encoding="utf-8") as fh:
+                ctx = SourceContext(path, fh.read())
+        except (OSError, SyntaxError):
+            continue
+        for sup in ctx.suppressions:
+            total += 1
+            ids = ", ".join(sup.rule_ids)
+            just = sup.justification or "(NO JUSTIFICATION)"
+            log(f"{path}:{sup.line}: ignore[{ids}] — {just}")
+            unknown = [r for r in sup.rule_ids if r not in RULES]
+            if unknown:
+                stale += 1
+                log(f"{path}:{sup.line}: STALE — rule ID(s) "
+                    f"{', '.join(unknown)} not in the catalog")
+    log(f"[verify] {total} ignore(s), {stale} stale")
+    return 1 if stale else 0
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(
         prog="python -m repro.verify",
-        description="two-layer invariant checker "
+        description="three-layer invariant checker "
                     "(docs/STATIC_ANALYSIS.md)")
     p.add_argument("--strict", action="store_true",
                    help="exit 1 when any finding survives (the CI gate)")
-    p.add_argument("--layer", choices=["a", "b", "all"], default="all",
-                   help="which layer(s) to run (default: all)")
+    p.add_argument("--layer", choices=["a", "b", "c", "all"], default="all",
+                   help="which layer(s) to run (default: all = A+B; "
+                        "add Layer C with --taint or --layer c)")
+    p.add_argument("--taint", action="store_true",
+                   help="also run Layer C (Byzantine taint/influence "
+                        "analysis, RV30x)")
     p.add_argument("--paths", nargs="*", default=None,
                    help="files/dirs for Layer A (default: the src/ tree)")
     p.add_argument("--aggregators", nargs="*", default=None,
-                   help="restrict Layer B to these registered names")
+                   help="restrict Layers B/C to these registered names")
     p.add_argument("--num-shards", type=int, default=4,
                    help="mesh size for the Layer-B contract trace "
                         "(default 4; must divide 8)")
     p.add_argument("--full-matrix", action="store_true",
                    help="Layer B over shard counts 2/4/8 with the compiled-"
-                        "HLO d-independence pass at both scales (nightly)")
+                        "HLO d-independence pass at both scales; Layer C "
+                        "over every aggregator × codec cell (nightly)")
     p.add_argument("--seed", type=int, default=0,
                    help="seed for the traced aggregation key")
+    p.add_argument("--format", choices=["text", "sarif"], default="text",
+                   help="findings output format (sarif = SARIF 2.1.0 for "
+                        "code scanning)")
+    p.add_argument("--output", default=None,
+                   help="write the findings report to this file instead of "
+                        "stdout")
+    p.add_argument("--audit-ignores", action="store_true",
+                   help="list every # repro: ignore[...] with its "
+                        "justification; exit 1 on stale rule IDs")
     p.add_argument("--list-rules", action="store_true",
                    help="print the rule catalog and exit")
     args = p.parse_args(argv)
@@ -95,21 +156,42 @@ def main(argv=None) -> int:
             print(f"    motivation: {rule.motivation}")
         return 0
 
+    if args.audit_ignores:
+        paths = args.paths or [_default_src_root()]
+        return audit_ignores(paths)
+
+    # SARIF to stdout must stay machine-parseable: progress and the text
+    # rendering of the findings go to stderr in that mode.
+    sarif_to_stdout = args.format == "sarif" and args.output is None
+    report = sys.stderr if sarif_to_stdout else sys.stdout
+
+    def log(*a, **kw):
+        kw.setdefault("file", report)
+        print(*a, **kw)
+
+    run_c = args.taint or args.layer == "c"
     findings: list[Finding] = []
     try:
         if args.layer in ("a", "all"):
             paths = args.paths or [_default_src_root()]
             a = run_layer_a(paths)
-            print(f"[verify] layer A: {len(a)} finding(s) over "
-                  f"{', '.join(paths)}")
+            log(f"[verify] layer A: {len(a)} finding(s) over "
+                f"{', '.join(paths)}")
             findings.extend(a)
         if args.layer in ("b", "all"):
             shards = [2, 4, 8] if args.full_matrix else [args.num_shards]
             b = run_layer_b(aggregators_filter=args.aggregators,
                             num_shards_list=shards, seed=args.seed,
-                            hlo_both_scales=args.full_matrix)
-            print(f"[verify] layer B: {len(b)} finding(s)")
+                            hlo_both_scales=args.full_matrix, log=log)
+            log(f"[verify] layer B: {len(b)} finding(s)")
             findings.extend(b)
+        if run_c:
+            c = run_layer_c(aggregators_filter=args.aggregators,
+                            full_matrix=args.full_matrix,
+                            num_shards=args.num_shards, seed=args.seed,
+                            log=log)
+            log(f"[verify] layer C: {len(c)} finding(s)")
+            findings.extend(c)
     except SystemExit:
         raise
     except Exception:
@@ -119,9 +201,18 @@ def main(argv=None) -> int:
         return 2
 
     for f in findings:
-        print(f.format())
-    n = len(findings)
-    print(f"[verify] {n} finding(s) total")
+        log(f.format())
+    log(f"[verify] {len(findings)} finding(s) total")
+
+    if args.format == "sarif":
+        from repro.verify import sarif
+        if args.output is not None:
+            with open(args.output, "w", encoding="utf-8") as fh:
+                sarif.dump(findings, fh)
+            log(f"[verify] SARIF written to {args.output}")
+        else:
+            sarif.dump(findings, sys.stdout)
+
     if findings and args.strict:
         return 1
     return 0

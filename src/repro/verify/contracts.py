@@ -70,7 +70,8 @@ def harness_tree(m: int, scale: int):
 
 
 def harness_cfg(name: str, *, m: int = HARNESS_M, k: int = HARNESS_K,
-                q: int = HARNESS_Q):
+                q: int = HARNESS_Q, codec: str | None = None,
+                round_backend: str = "auto"):
     from repro.core import aggregators
     from repro.core.robust_train import RobustConfig
     # an aggregator with a native wire codec is traced through its
@@ -78,11 +79,13 @@ def harness_cfg(name: str, *, m: int = HARNESS_M, k: int = HARNESS_K,
     # that is the path the contract claims are about — sign_sgd_majority's
     # zero-collective guarantee must hold for the packing + vote, and
     # int8_gmom's d-independence must cover the per-worker scale combine.
-    codec = aggregators.get_aggregator(name).native_codec or "none"
+    # Layer C's full matrix overrides ``codec`` to probe every wire format.
+    if codec is None:
+        codec = aggregators.get_aggregator(name).native_codec or "none"
     return RobustConfig(num_workers=m, num_byzantine=q, num_batches=k,
                         attack="none", aggregator=name,
                         gmom_max_iters=8, gmom_tol=1e-7,
-                        compression=codec)
+                        compression=codec, round_backend=round_backend)
 
 
 def _specs(tree, axis: str):
@@ -102,7 +105,8 @@ def _specs(tree, axis: str):
     return jax.tree.map(in_spec, tree), out_spec
 
 
-def _sharded_fn(name: str, num_shards: int, scale: int, *, seed: int):
+def _sharded_fn(name: str, num_shards: int, scale: int, *, seed: int,
+                codec: str | None = None):
     """(traceable fn, example args) — the production shard_map path."""
     import jax
     from jax.sharding import PartitionSpec as P
@@ -110,7 +114,7 @@ def _sharded_fn(name: str, num_shards: int, scale: int, *, seed: int):
     from repro.models.meshctx import shard_map
 
     axis = "model"
-    cfg = harness_cfg(name)
+    cfg = harness_cfg(name, codec=codec)
     stacked = harness_tree(HARNESS_M, scale)
     key = jax.random.PRNGKey(seed)
     mesh = jax.make_mesh((num_shards,), (axis,))
@@ -133,6 +137,81 @@ def _anchor(name: str) -> str:
     return f"<aggregator:{name}>"
 
 
+# --------------------------------------------------------------------------
+# trace cache
+#
+# One production trace serves every rule that inspects it: RV201/RV202 read
+# the shard_map jaxpr + HLO, RV203 the virtual-mode jaxpr, and Layer C's
+# taint pass re-walks the very same jaxprs with influence labels.  Tracing
+# (and especially XLA compilation) dominates `--strict` wall time, so each
+# (kind, aggregator, codec, shards, scale, seed) cell is traced exactly
+# once per process.
+
+_TRACE_CACHE: dict[tuple, object] = {}
+
+
+def clear_trace_cache() -> None:
+    """Drop every cached trace (tests re-registering dummy aggregators)."""
+    _TRACE_CACHE.clear()
+
+
+def _resolve_codec(name: str, codec: str | None) -> str:
+    if codec is not None:
+        return codec
+    from repro.core import aggregators
+    return aggregators.get_aggregator(name).native_codec or "none"
+
+
+def traced_shard_map(name: str, *, num_shards: int, scale: int, seed: int,
+                     codec: str | None = None):
+    """(closed_jaxpr, out_shape, example_args) for the shard_map path."""
+    import jax
+    codec = _resolve_codec(name, codec)
+    key = ("shard_map", name, codec, num_shards, scale, seed)
+    if key not in _TRACE_CACHE:
+        fn, args = _sharded_fn(name, num_shards, scale, seed=seed,
+                               codec=codec)
+        jaxpr, out_shape = jax.make_jaxpr(fn, return_shape=True)(*args)
+        _TRACE_CACHE[key] = (jaxpr, out_shape, args)
+    return _TRACE_CACHE[key]
+
+
+def compiled_shard_map_text(name: str, *, num_shards: int, scale: int,
+                            seed: int, codec: str | None = None) -> str:
+    """Compiled-HLO text for the shard_map path (the expensive view)."""
+    import jax
+    codec = _resolve_codec(name, codec)
+    key = ("hlo", name, codec, num_shards, scale, seed)
+    if key not in _TRACE_CACHE:
+        fn, args = _sharded_fn(name, num_shards, scale, seed=seed,
+                               codec=codec)
+        _TRACE_CACHE[key] = jax.jit(fn).lower(*args).compile().as_text()
+    return _TRACE_CACHE[key]
+
+
+def traced_flat(name: str, *, seed: int, codec: str | None = None):
+    """(closed_jaxpr, out_shape, example_args) for the unsharded
+    ``aggregate_reported`` path on the Layer-B harness tree.
+
+    ``round_backend`` is pinned to the jnp reference pipeline: the fused
+    Pallas kernel is an opaque primitive to jaxpr-level analysis, and the
+    reference path is the semantics the kernel is bit-tested against.
+    """
+    import jax
+    from repro.core.robust_train import aggregate_reported
+    codec = _resolve_codec(name, codec)
+    key = ("flat", name, codec, None, 1, seed)
+    if key not in _TRACE_CACHE:
+        cfg = harness_cfg(name, codec=codec, round_backend="reference")
+        stacked = harness_tree(HARNESS_M, 1)
+        prng = jax.random.PRNGKey(seed)
+        jaxpr, out_shape = jax.make_jaxpr(
+            lambda s, k: aggregate_reported(s, cfg, key=k),
+            return_shape=True)(stacked, prng)
+        _TRACE_CACHE[key] = (jaxpr, out_shape, (stacked, prng))
+    return _TRACE_CACHE[key]
+
+
 def _fmt_uses(uses) -> str:
     return ", ".join(
         f"{u.prim}{list(u.out_shapes)}" for u in uses) or "none"
@@ -149,12 +228,12 @@ def check_aggregator(name: str, *, num_shards: int = 4, seed: int = 0,
     findings: list[Finding] = []
     anchor = _anchor(name)
 
-    # --- jaxpr view at both scales
+    # --- jaxpr view at both scales (cached — Layer C re-walks these)
     uses = {}
     for scale in (1, 2):
-        fn, args = _sharded_fn(name, num_shards, scale, seed=seed)
-        uses[scale] = collectives.jaxpr_collectives(
-            jax.make_jaxpr(fn)(*args))
+        jaxpr, _, _ = traced_shard_map(name, num_shards=num_shards,
+                                       scale=scale, seed=seed)
+        uses[scale] = collectives.jaxpr_collectives(jaxpr)
 
     if contract == "coordinate_wise":
         if uses[1]:
@@ -187,8 +266,8 @@ def check_aggregator(name: str, *, num_shards: int = 4, seed: int = 0,
     # jaxpr never asked for)
     hlo = {}
     for scale in (1, 2) if hlo_both_scales else (1,):
-        fn, args = _sharded_fn(name, num_shards, scale, seed=seed)
-        hlo[scale] = jax.jit(fn).lower(*args).compile().as_text()
+        hlo[scale] = compiled_shard_map_text(
+            name, num_shards=num_shards, scale=scale, seed=seed)
 
     if contract == "coordinate_wise":
         nbytes = collectives.hlo_collective_bytes(hlo[1])
@@ -231,18 +310,24 @@ def audit_determinism(name: str, *, seed: int = 0) -> list[Finding]:
     from repro.core.robust_train import aggregate_reported
     from repro.core.shard_aggregation import ShardSpec
 
-    cfg = harness_cfg(name, m=DET_M, k=DET_K)
-    stacked = {
-        "w": _fill((DET_M, 15), 11),
-        "b": {"x": _fill((DET_M, 3, 10), 13)},
-        "s": _fill((DET_M,), 17),
-    }
-    key = jax.random.PRNGKey(seed)
-    spec = ShardSpec(num_shards=DET_SHARDS, mode="virtual", axis="model")
+    cache_key = ("virtual", name, None, DET_SHARDS, 1, seed)
     try:
-        jaxpr = jax.make_jaxpr(
-            lambda s, k: aggregate_reported(s, cfg, key=k, shard_spec=spec))(
-                stacked, key)
+        if cache_key in _TRACE_CACHE:
+            jaxpr = _TRACE_CACHE[cache_key]
+        else:
+            cfg = harness_cfg(name, m=DET_M, k=DET_K)
+            stacked = {
+                "w": _fill((DET_M, 15), 11),
+                "b": {"x": _fill((DET_M, 3, 10), 13)},
+                "s": _fill((DET_M,), 17),
+            }
+            key = jax.random.PRNGKey(seed)
+            spec = ShardSpec(num_shards=DET_SHARDS, mode="virtual",
+                             axis="model")
+            jaxpr = jax.make_jaxpr(
+                lambda s, k: aggregate_reported(
+                    s, cfg, key=k, shard_spec=spec))(stacked, key)
+            _TRACE_CACHE[cache_key] = jaxpr
     except Exception as e:  # noqa: BLE001
         # an aggregator that cannot trace under the meshless virtual spec
         # (e.g. a hardcoded collective) also breaks the sharded-vs-gathered

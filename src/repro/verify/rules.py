@@ -1,7 +1,8 @@
 """Rule framework shared by both verifier layers.
 
 A *rule* is a named invariant with a stable ID (``RV1xx`` = Layer A source
-lint, ``RV2xx`` = Layer B lowered-IR analysis), a one-line title, and the
+lint, ``RV2xx`` = Layer B lowered-IR analysis, ``RV3xx`` = Layer C
+Byzantine taint / influence analysis), a one-line title, and the
 PR / bug class that motivated it.  A *finding* is one violation with a
 precise source span (Layer A) or a synthesized anchor (Layer B, which
 reports against the registration site of the offending aggregator).
@@ -36,7 +37,7 @@ import re
 class Rule:
     id: str
     title: str
-    layer: str        # "A" (AST lint) | "B" (jaxpr/HLO analysis)
+    layer: str        # "A" (AST lint) | "B" (jaxpr/HLO) | "C" (taint)
     motivation: str   # the PR / bug class this rule encodes
 
 
@@ -112,6 +113,26 @@ _rule("RV204", "Pallas round-kernel VMEM budget inconsistent with the "
       "PR 3: the dispatcher's fits_vmem() and the kernel's _check_vmem() "
       "guard share a formula only by convention — and the budget must fit "
       "the declared per-core VMEM")
+_rule("RV301", "adversary-tainted value reaches the params/opt_state "
+      "update without passing the declared sanitization point", "C",
+      "PAPER.md §1.3: Byzantine reports create 'arbitrary and unspecified "
+      "dependency' — Thm 3 holds only because the geometric median of "
+      "means is the SOLE channel from reports to θ; a tainted codec scale "
+      "or buffered report added post-aggregation voids the guarantee")
+_rule("RV302", "adversary-tainted value flows into control state that "
+      "outlives the round outside the documented age-discount path", "C",
+      "PR 9: staleness ages and attack timing legitimately couple rounds "
+      "per docs/ASYNC.md, but a *report*-derived value steering ages, "
+      "bounds, or metrics history re-opens the cross-iteration dependency "
+      "the paper's proof excludes")
+_rule("RV303", "aggregator influence certificate inconsistent with its "
+      "declared sanitization_point", "C",
+      "PR 5 soundness split, rediscovered from dataflow: every "
+      "report→output path must cross a bounded-influence op (order "
+      "statistic / rank selection / clip / sign vote / Weiszfeld) for "
+      "ROBUST rules, while KNOWN-UNSOUND rules (mean, norm_select, "
+      "norm_clip_mean) must certify unbounded — a stale or wrong "
+      "declaration is itself a finding")
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,363 @@
+"""Layer C: Byzantine taint analysis over the traced production paths.
+
+PAPER.md §1.3: Byzantine reports "create arbitrary and unspecified
+dependency among the iterations and the aggregated gradients" — the Thm-3
+argument holds only because the sanitizing aggregator is the SOLE channel
+from adversary-controlled inputs to the model update.  This module makes
+that proof obligation a machine-checked invariant: it marks every
+adversary-controlled input of the traced production computation, runs the
+``repro.verify.influence`` label engine over the jaxpr, and compares what
+comes out against the registry's declared ``sanitization_point``.
+
+Adversary-controlled sources (the taint roots):
+
+* ``report``        — the stacked per-worker gradients, their compressed
+                      wire payloads, AND the per-worker codec scales
+                      (scales are derived from the reports inside the
+                      traced encode, so they inherit the taint without
+                      special-casing), plus buffered stale reports.
+* ``age``           — per-worker arrival ages in the ``StalenessBuffer``
+                      (an asynchronous adversary controls its own timing).
+* ``attack_state``  — the attack schedule's carried memory.
+
+Three check surfaces:
+
+* **per-aggregator influence certificates** (RV301/RV303): the unsharded
+  ``aggregate_reported`` path and the ``make_sharded_aggregate`` /
+  ``shard_map`` path, per wire codec — the aggregator × codec × shard-mode
+  matrix.  The classification never reads the declaration; it rediscovers
+  the bounded-op family from dataflow and compares after.
+* **the multi-round trainer** (RV301/RV302): ``make_run_rounds``'s scanned
+  round body with a stateful attack schedule, a straggler arrival
+  schedule, the int8 wire, and the staleness buffer — proving reports
+  reach params/opt_state only BOUNDED and that report taint never steers
+  cross-round control state (ages, bounds, metrics) outside the
+  documented ``γ^age`` discount path of docs/ASYNC.md.
+
+The declared↔discovered comparison (RV303) runs only on an aggregator's
+*canonical* cell — its native codec (or ``none``) — because a foreign
+codec can legitimately change the certificate: ``mean`` over sign-decoded
+±1 values IS bounded (that's just an unnormalized sign vote), which says
+nothing about ``mean``'s declaration.  RV301 (declared sanitizer bypassed
+by a RAW path) applies to every cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.verify import influence
+from repro.verify.rules import Finding
+
+ROUND_ANCHOR = "<round:make_run_rounds>"
+
+# the round-trace harness configuration: every PR-8/PR-9 adversary surface
+# at once — stateful attack memory, straggler arrivals feeding the
+# staleness buffer, and the int8 wire with per-worker scales.
+_ROUND_M = 6
+_ROUND_Q = 1
+_ROUND_K = 3
+_ROUND_BOUND = 2
+_ROUND_ROUNDS = 2
+
+
+def _raw(source: str) -> influence.Label:
+    return influence.raw(source)
+
+
+def _labels_for(tree, label: influence.Label) -> list[influence.Label]:
+    import jax
+    return [label] * len(jax.tree.leaves(tree))
+
+
+def _leaf_paths(tree) -> list[str]:
+    import jax
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(path) or "<leaf>" for path, _leaf in flat]
+
+
+@dataclasses.dataclass(frozen=True)
+class TaintReport:
+    """The influence certificate of one aggregator × codec × mode cell."""
+    name: str
+    codec: str
+    mode: str
+    leaves: tuple    # ((path, Label), ...) per output leaf
+
+    @property
+    def level(self) -> int:
+        return max((l.level for _, l in self.leaves),
+                   default=influence.CLEAN)
+
+    @property
+    def kinds(self) -> frozenset:
+        out = frozenset()
+        for _, l in self.leaves:
+            out |= l.kinds
+        return out
+
+    @property
+    def bounded(self) -> bool:
+        return self.level < influence.RAW
+
+    def raw_leaves(self):
+        return [(p, l) for p, l in self.leaves
+                if l.level == influence.RAW]
+
+
+def classify_aggregator(name: str, *, codec: str | None = None,
+                        mode: str = "unsharded", num_shards: int = 4,
+                        seed: int = 0) -> TaintReport:
+    """Trace one production cell and propagate report taint through it."""
+    import jax
+    from repro.core import aggregators
+    from repro.verify import contracts
+
+    agg = aggregators.get_aggregator(name)
+    codec = codec or agg.native_codec or "none"
+    if mode == "unsharded":
+        jaxpr, out_shape, args = contracts.traced_flat(
+            name, seed=seed, codec=codec)
+    elif mode == "shard_map":
+        jaxpr, out_shape, args = contracts.traced_shard_map(
+            name, num_shards=num_shards, scale=1, seed=seed, codec=codec)
+    else:
+        raise ValueError(f"unknown taint mode {mode!r}")
+
+    stacked, key = args
+    in_labels = _labels_for(stacked, _raw("report")) + \
+        _labels_for(key, influence.CLEAN_LABEL)
+    out_labels = influence.run_jaxpr(jaxpr, in_labels)
+    paths = _leaf_paths(out_shape)
+    if len(paths) != len(out_labels):
+        raise RuntimeError(
+            f"taint engine returned {len(out_labels)} output labels for "
+            f"{len(paths)} output leaves ({name} × {codec} × {mode})")
+    return TaintReport(name=name, codec=codec, mode=mode,
+                       leaves=tuple(zip(paths, out_labels)))
+
+
+def check_aggregator_taint(name: str, *, codec: str | None = None,
+                           mode: str = "unsharded", num_shards: int = 4,
+                           seed: int = 0,
+                           certify: bool = True) -> list[Finding]:
+    """RV301/RV303 findings for one aggregator × codec × mode cell.
+
+    ``certify=False`` (non-canonical codec cells of the full matrix) keeps
+    only the RV301 sanitizer-bypass check — see the module docstring.
+    """
+    from repro.core import aggregators
+    from repro.verify.contracts import _anchor
+
+    agg = aggregators.get_aggregator(name)
+    declared = agg.sanitization_point
+    rep = classify_aggregator(name, codec=codec, mode=mode,
+                              num_shards=num_shards, seed=seed)
+    anchor = _anchor(name)
+    findings: list[Finding] = []
+
+    if declared is not None:
+        for path, label in rep.raw_leaves():
+            findings.append(Finding(
+                rule="RV301", path=anchor, line=0, col=0,
+                message=f"declares sanitization_point={declared!r} but "
+                        f"output leaf {path} carries RAW worker-report "
+                        f"influence ({label.describe()}) under codec "
+                        f"{rep.codec!r} / {mode} — a report reaches the "
+                        f"update path without passing the sanitizer"))
+
+    if certify:
+        if declared is None and rep.bounded:
+            findings.append(Finding(
+                rule="RV303", path=anchor, line=0, col=0,
+                message=f"declares no sanitization_point but every "
+                        f"report→output path is bounded by dataflow "
+                        f"(discovered kinds: {sorted(rep.kinds)}) under "
+                        f"codec {rep.codec!r} / {mode} — the declaration "
+                        f"is stale: declare the sanitizer"))
+        if declared is not None and rep.bounded and \
+                declared not in rep.kinds:
+            findings.append(Finding(
+                rule="RV303", path=anchor, line=0, col=0,
+                message=f"declared sanitization_point {declared!r} does "
+                        f"not appear on the report→output dataflow "
+                        f"(discovered bounded ops: {sorted(rep.kinds)}) "
+                        f"under codec {rep.codec!r} / {mode} — stale or "
+                        f"wrong declaration"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# the multi-round trainer trace (RV301 + RV302)
+
+
+def _round_harness(seed: int):
+    """(closed_jaxpr, out_shape, in_labels) for a 2-round scanned run with
+    every adversary surface live at once."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import byzantine, staleness
+    from repro.core.robust_train import RobustConfig, make_run_rounds
+    from repro.optim.optimizers import sgd
+    from repro.verify.contracts import _fill
+
+    m, q, k = _ROUND_M, _ROUND_Q, _ROUND_K
+    cfg = RobustConfig(
+        num_workers=m, num_byzantine=q, num_batches=k,
+        aggregator="int8_gmom", attack="sign_flip",
+        compression="int8_stochastic",
+        arrival="straggler_fixed", staleness_bound=_ROUND_BOUND,
+        gmom_max_iters=4, gmom_tol=1e-6, round_backend="reference")
+    schedule = byzantine.make_schedule(
+        "stealth_then_strike", num_workers=m, num_byzantine=q)
+    arrival = staleness.make_arrival(
+        "straggler_fixed", num_workers=m, staleness_bound=_ROUND_BOUND)
+
+    params = {"w": _fill((4,), 19)}
+
+    def loss_fn(p, batch):
+        pred = batch["x"] @ p["w"]
+        return 0.5 * jnp.mean(
+            jnp.square(pred - batch["y"]).astype(jnp.float32))
+
+    worker_batches = {"x": _fill((m, 2, 4), 23), "y": _fill((m, 2), 29)}
+    optimizer = sgd(0.1)
+    opt_state = optimizer.init(params)
+    astate = schedule.init_state()
+    sbuf = staleness.init_buffer(params, m, _ROUND_BOUND)
+    key = jax.random.PRNGKey(seed)
+
+    run = make_run_rounds(loss_fn, optimizer, cfg, schedule=schedule,
+                          arrival=arrival)
+
+    def fn(p, o, b, kk, a, s):
+        return run(p, o, b, kk, num_rounds=_ROUND_ROUNDS,
+                   attack_state=a, stale_buffer=s)
+
+    jaxpr, out_shape = jax.make_jaxpr(fn, return_shape=True)(
+        params, opt_state, worker_batches, key, astate, sbuf)
+
+    # taint roots: the attack schedule's memory, the buffered last reports,
+    # and the per-worker ages.  Honest worker batches / params / keys stay
+    # CLEAN — marking honest data would (correctly!) flag the loss metrics
+    # and drown the adversary-specific signal.
+    in_labels = (
+        _labels_for(params, influence.CLEAN_LABEL)
+        + _labels_for(opt_state, influence.CLEAN_LABEL)
+        + _labels_for(worker_batches, influence.CLEAN_LABEL)
+        + _labels_for(key, influence.CLEAN_LABEL)
+        + _labels_for(astate, _raw("attack_state"))
+        + _labels_for(sbuf.grads, _raw("report"))
+        + _labels_for(sbuf.age, _raw("age"))
+        + _labels_for(sbuf.bound, influence.CLEAN_LABEL)
+    )
+    return jaxpr, out_shape, in_labels
+
+
+def classify_round(*, seed: int = 0):
+    """[(section, leaf_path, Label), ...] over the round-trace outputs
+    (params, opt_state, attack_state, stale_buffer, metrics)."""
+    import jax
+    jaxpr, out_shape, in_labels = _round_harness(seed)
+    out_labels = influence.run_jaxpr(jaxpr, in_labels)
+
+    p_sh, o_sh, a_sh, s_sh, m_sh = out_shape
+    sections = [
+        ("params", p_sh), ("opt_state", o_sh), ("attack_state", a_sh),
+        ("stale_buffer.grads", s_sh.grads), ("stale_buffer.age", s_sh.age),
+        ("stale_buffer.bound", s_sh.bound), ("metrics", m_sh),
+    ]
+    rows = []
+    it = iter(out_labels)
+    for section, sub in sections:
+        paths = _leaf_paths(sub)
+        for path in paths:
+            rows.append((section, path, next(it)))
+    leftover = sum(1 for _ in it)
+    if leftover:
+        raise RuntimeError(
+            f"round-trace section split dropped {leftover} output labels")
+    return rows
+
+
+def check_round_taint(*, seed: int = 0) -> list[Finding]:
+    """RV301/RV302 over the scanned multi-round trainer.
+
+    * params / opt_state must never be RAW: reports reach the TrainState
+      update only through the aggregator's bounded channel (RV301).
+    * metrics outlive the round inside TrainState's history — RAW report
+      influence there is the cross-iteration dependency §1.3 excludes
+      (RV302).  BOUNDED is fine (byz/stale counts are capped by design).
+    * the staleness ages and bound may depend on timing (``age``) and on
+      attack scheduling (``attack_state`` — ``byzantine_max_stale``
+      legitimately routes the byz mask into arrivals per docs/ASYNC.md),
+      but never on report VALUES: a report steering its own future weight
+      outside the γ^age discount is RV302.
+    * attack_state and the buffered reports are adversary memory by
+      definition — exempt.
+    """
+    findings: list[Finding] = []
+    for section, path, label in classify_round(seed=seed):
+        where = f"{section}{path}"
+        if section in ("params", "opt_state"):
+            if label.level == influence.RAW:
+                findings.append(Finding(
+                    rule="RV301", path=ROUND_ANCHOR, line=0, col=0,
+                    message=f"{where} carries RAW adversary influence "
+                            f"({label.describe()}) after a full round — "
+                            f"reports must reach the TrainState update "
+                            f"only through the sanitizing aggregator"))
+        elif section == "metrics":
+            if label.level == influence.RAW:
+                findings.append(Finding(
+                    rule="RV302", path=ROUND_ANCHOR, line=0, col=0,
+                    message=f"{where} carries RAW adversary influence "
+                            f"({label.describe()}) — metrics history "
+                            f"outlives the round inside TrainState"))
+        elif section in ("stale_buffer.age", "stale_buffer.bound"):
+            if "report" in label.sources:
+                findings.append(Finding(
+                    rule="RV302", path=ROUND_ANCHOR, line=0, col=0,
+                    message=f"{where} depends on report VALUES "
+                            f"({label.describe()}) — ages/bounds may "
+                            f"couple rounds only through arrival timing "
+                            f"and attack scheduling (docs/ASYNC.md), "
+                            f"never through what a worker sent"))
+        # attack_state / stale_buffer.grads: adversary memory, exempt.
+    return findings
+
+
+# --------------------------------------------------------------------------
+# CLI driver
+
+
+def run_taint(*, aggregators_filter=None, full_matrix: bool = False,
+              num_shards: int = 4, seed: int = 0,
+              log=print) -> list[Finding]:
+    """The Layer C pass: per-aggregator certificates (native codec in
+    tier-1, the full codec matrix nightly) in both shard modes, then the
+    multi-round trace."""
+    from repro.core import aggregators as agg_mod
+
+    names = [n for n in agg_mod.available() if not n.startswith("_")]
+    if aggregators_filter:
+        unknown = sorted(set(aggregators_filter) - set(agg_mod.available()))
+        if unknown:
+            raise SystemExit(f"unknown aggregator(s): {', '.join(unknown)}")
+        names = [n for n in agg_mod.available() if n in aggregators_filter]
+
+    all_codecs = ["none", "sign", "int8_stochastic"]
+    findings: list[Finding] = []
+    for name in names:
+        native = agg_mod.get_aggregator(name).native_codec or "none"
+        codecs = all_codecs if full_matrix else [native]
+        for codec in codecs:
+            for mode in ("unsharded", "shard_map"):
+                log(f"[verify] layer C: {name} × {codec} × {mode}")
+                findings.extend(check_aggregator_taint(
+                    name, codec=codec, mode=mode, num_shards=num_shards,
+                    seed=seed, certify=(codec == native)))
+    log("[verify] layer C: round trace "
+        "(scan × stealth attack × staleness × int8 wire)")
+    findings.extend(check_round_taint(seed=seed))
+    return findings

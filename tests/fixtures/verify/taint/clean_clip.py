@@ -1,0 +1,36 @@
+"""Precision fixture for the Layer C taint tests.
+
+This dummy READS report-tainted values everywhere — the median report
+norm as a clip envelope, the coordinate median as the base value — but
+only ever inside bounded ops, so a precise analysis must report it clean:
+zero RV301 (the declared ``order_stat`` sanitizer is on every path) and
+zero RV303 (the declaration matches the discovered kinds).  This is the
+``norm_filter_gmom`` pattern reduced to its essence: a robust threshold
+derived FROM the tainted reports is not a leak.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregators
+from repro.core.geometric_median import batch_mean_norms
+
+NAME = "_clean_clip"
+
+
+@aggregators.register(
+    NAME,
+    "test-only: coordinate median clamped into a median-norm envelope — "
+    "tainted reads only inside bounded ops (taint-precision fixture)",
+    needs_shard_spec=True, shard_contract="norm_based",
+    sanitization_point="order_stat")
+def _clean_clip_aggregator(stacked_grads, *, shard_spec=None, **_kw):
+    norms = batch_mean_norms(stacked_grads, shard_spec=shard_spec)
+    med = jnp.median(norms)   # tainted, but order-statistic bounded
+    base = aggregators.coordinate_median_aggregator(stacked_grads)
+    return jax.tree.map(
+        lambda g: jnp.clip(g, -med, med).astype(g.dtype), base)
+
+
+def unregister():
+    aggregators._REGISTRY.pop(NAME, None)

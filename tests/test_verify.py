@@ -159,7 +159,8 @@ def test_ignore_unknown_rule_id_raises_rv100_and_keeps_finding():
 def test_every_rule_documented_in_catalog():
     from repro.verify.rules import RULES
     for rid in ("RV100", "RV101", "RV102", "RV103", "RV104", "RV105",
-                "RV106", "RV107", "RV201", "RV202", "RV203", "RV204"):
+                "RV106", "RV107", "RV201", "RV202", "RV203", "RV204",
+                "RV301", "RV302", "RV303"):
         assert rid in RULES
         assert RULES[rid].motivation
 
@@ -216,6 +217,11 @@ def test_ci_wires_verifier_into_both_lanes():
     slow = json.dumps(wf["jobs"]["slow"])
     assert "repro.verify --strict" in tier1
     assert "repro.verify --strict --full-matrix" in slow
+    # Layer C rides both lanes: native-codec cells in tier-1, the full
+    # aggregator × codec matrix nightly — and tier-1 publishes SARIF
+    assert "--taint" in tier1 and "--taint" in slow
+    assert "--format sarif" in tier1
+    assert "upload-sarif" in tier1
 
 
 def test_cli_list_rules():
